@@ -1,0 +1,220 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+All run at CI scale (CPU, minutes) with the calibrated fast preset — the
+*shapes* of the curves are the reproduction targets; absolute times are
+host-CPU and feed the relative-scaling claims only.
+
+  fig1_calcium          Fig. 1: mean/std calcium -> homeostatic target 0.7
+  fig2_synapses         Fig. 2: total synapses, FMM vs Barnes-Hut (vs direct)
+  fig3_strong_scaling   Fig. 3: connectivity-update time vs n per "rank"
+  fig4_weak_scaling     Fig. 4: time vs device count at fixed n/device
+                        (subprocess with forced host device counts)
+  fig5_expansion_error  Fig. 5: Hermite/Taylor truncation error distribution
+  complexity_sweep      Sec. 4.1: pair-evaluation counts vs n (O(n) claim)
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+_THIS = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_THIS), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def _engine(n, method, seed=42, speedup=100.0, depth=None):
+    import jax
+    from repro.core.engine import EngineConfig, PlasticityEngine
+    from repro.core.msp import MSPConfig
+    from repro.core.traversal import FMMConfig
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+    return PlasticityEngine(pos, MSPConfig.calibrated(speedup=speedup),
+                            FMMConfig(c1=8, c2=8),
+                            EngineConfig(method=method, depth=depth))
+
+
+def fig1_calcium(steps=20_000, n=600) -> Dict:
+    import jax
+    out = {}
+    for method in ("fmm", "barnes_hut"):
+        eng = _engine(n, method)
+        st, recs = eng.simulate(eng.init_state(), jax.random.key(0), steps)
+        ca = np.asarray(recs.calcium_mean)
+        sd = np.asarray(recs.calcium_std)
+        out[method] = {"ca_end": float(ca[-1000:].mean()),
+                       "std_end": float(sd[-1000:].mean()),
+                       "curve_every_500": ca[::500].round(4).tolist()}
+    out["target"] = 0.7
+    out["agree"] = abs(out["fmm"]["ca_end"] - out["barnes_hut"]["ca_end"])
+    return out
+
+
+def fig2_synapses(steps=20_000, n=600) -> Dict:
+    import jax
+    out = {}
+    for method in ("fmm", "barnes_hut", "direct"):
+        eng = _engine(n, method)
+        st, recs = eng.simulate(eng.init_state(), jax.random.key(0), steps)
+        syn = np.asarray(recs.num_synapses)
+        out[method] = {"syn_end": int(syn[-1]),
+                       "curve_every_500": syn[::500].tolist()}
+    # the paper: FMM trails BH slightly (more collisions)
+    out["fmm_over_bh"] = out["fmm"]["syn_end"] / out["barnes_hut"]["syn_end"]
+    return out
+
+
+def fig3_strong_scaling(neurons=(1_250, 2_500, 5_000, 10_000, 20_000),
+                        reps=3) -> Dict:
+    """Connectivity-update wall time vs n (single host device stands in for
+    one rank; the paper sweeps n per rank at fixed p)."""
+    import jax
+    out = {}
+    for n in neurons:
+        eng = _engine(n, "fmm", depth=None)
+        state = eng.init_state()
+        # give every neuron vacancies so the update does representative work
+        neurons_state = state.neurons._replace(
+            ax_elems=jax.numpy.full((n,), 2.0),
+            den_elems=jax.numpy.full((n,), 2.0))
+        state = state._replace(neurons=neurons_state)
+        upd = jax.jit(lambda s, k: eng.connectivity_update(s, k))
+        k = jax.random.key(0)
+        jax.block_until_ready(upd(state, k).edges.valid)   # compile
+        ts = []
+        for r in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(upd(state, jax.random.key(r)).edges.valid)
+            ts.append(time.perf_counter() - t0)
+        out[n] = {"mean_s": float(np.mean(ts)), "min_s": float(np.min(ts)),
+                  "max_s": float(np.max(ts))}
+    ns = sorted(out)
+    out["scaling_ratios"] = [round(out[b]["mean_s"] / out[a]["mean_s"], 2)
+                             for a, b in zip(ns, ns[1:])]
+    return out
+
+
+_WEAK_SCRIPT = r'''
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.distributed import DistributedPlasticityEngine
+from repro.core.engine import EngineConfig
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+p = int(sys.argv[1]); n_per = int(sys.argv[2])
+n = p * n_per
+rng = np.random.default_rng(0)
+pos = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+mesh = Mesh(np.array(jax.devices()).reshape(p), ("data",))
+eng = DistributedPlasticityEngine(pos, mesh, "data",
+                                  MSPConfig.calibrated(speedup=100.0),
+                                  FMMConfig(c1=8, c2=8),
+                                  EngineConfig(method="fmm"))
+state = eng.init_state()
+step = eng.make_sharded_step()
+state, _ = step(state, jax.random.key(0))      # compile + warm
+jax.block_until_ready(state.neurons.x)
+t0 = time.perf_counter()
+for i in range(200):
+    state, _ = step(state, jax.random.key(i))
+jax.block_until_ready(state.neurons.x)
+print(json.dumps({"p": p, "n": n, "time_200_steps_s": time.perf_counter() - t0}))
+'''
+
+
+def fig4_weak_scaling(device_counts=(1, 2, 4, 8), n_per=512) -> Dict:
+    """Fixed n/device, growing device count (forced host devices; wall time
+    includes the simulated collectives — host CPU stands in for the fabric)."""
+    out = {}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    for p in device_counts:
+        res = subprocess.run(
+            [sys.executable, "-c", _WEAK_SCRIPT, str(p), str(n_per)],
+            env=env, capture_output=True, text=True, timeout=3600)
+        if res.returncode != 0:
+            out[p] = {"error": res.stderr[-500:]}
+        else:
+            out[p] = json.loads(res.stdout.strip().splitlines()[-1])
+    return out
+
+
+def fig5_expansion_error(num_boxes=500) -> Dict:
+    """Error of Hermite/Taylor vs direct over random representative boxes.
+    Paper: outliers below 0.125 % at p = (3,3,3).
+
+    Boxes are sampled inside the traversal's FGT validity regime
+    (side <= size_guard * sqrt(delta), default 0.5 -> side <= 375 at
+    sigma = 750): exactly the boxes on which the descent uses expansions —
+    larger boxes take the exact direct tier."""
+    import jax.numpy as jnp
+    from repro.core import direct, expansions as ex
+    from repro.core.traversal import FMMConfig
+    rng = np.random.default_rng(0)
+    delta = 750.0 ** 2
+    max_side = FMMConfig().size_guard * delta ** 0.5
+    errs_h, errs_t, errs_m2l, errs_pm = [], [], [], []
+    for i in range(num_boxes):
+        side = rng.uniform(100, max_side)
+        s_c = rng.uniform(300, 1700, 3)
+        t_c = s_c + rng.uniform(-800, 800, 3)
+        m, n = rng.integers(10, 80), rng.integers(10, 80)
+        src = jnp.array(s_c + rng.uniform(-side / 2, side / 2, (m, 3)),
+                        jnp.float32)
+        tgt = jnp.array(t_c + rng.uniform(-side / 2, side / 2, (n, 3)),
+                        jnp.float32)
+        w = jnp.array(rng.uniform(0, 5, m), jnp.float32)
+        a = jnp.array(rng.uniform(0, 5, n), jnp.float32)
+        s_cj = jnp.array(s_c, jnp.float32)
+        t_cj = jnp.array(t_c, jnp.float32)
+        u = direct.attraction(tgt, src, w, delta)        # exact per point
+        mass = float(a @ u)                              # exact bilinear
+        a_cent = (a @ tgt) / a.sum()
+        u_cent = float(direct.attraction(a_cent[None, :], src, w, delta)[0])
+        if mass < 1e-6 or u_cent < 1e-9:
+            continue
+        # --- the paper's Fig. 5: expansion vs direct AT THE SAME POINTS ---
+        herm = ex.hermite_coefficients(src, w, s_cj, delta)
+        uh_cent = float(ex.eval_hermite(herm, a_cent[None, :], s_cj,
+                                        delta)[0])
+        errs_h.append(abs(uh_cent - u_cent) / u_cent * 100)
+        tay = ex.taylor_coefficients(src, w, t_cj, delta)
+        ut = ex.eval_taylor(tay, tgt, t_cj, delta)
+        errs_t.append(abs(float(a @ ut) - mass) / mass * 100)
+        # --- our descent tiers' END-TO-END error vs the exact bilinear ----
+        moms = ex.axon_moments(tgt, a, t_cj, delta)
+        mt = float(ex.box_mass_taylor(moms, t_cj, herm, s_cj, delta))
+        mh = a.sum() * uh_cent
+        errs_m2l.append(abs(mt - mass) / mass * 100)
+        errs_pm.append(abs(mh - mass) / mass * 100)
+    q = lambda arr: {"median_pct": float(np.median(arr)),
+                     "q75_pct": float(np.percentile(arr, 75)),
+                     "max_pct": float(np.max(arr))}
+    return {"hermite": q(errs_h), "taylor": q(errs_t),
+            "m2l_bilinear_tier": q(errs_m2l),
+            "pointmass_tier_spatial": q(errs_pm),
+            "paper_bound_pct": 0.125, "boxes": len(errs_h)}
+
+
+def complexity_sweep() -> Dict:
+    """Sec. 4.1: dual-descent pair evaluations are linear in n; the direct
+    method is quadratic.  Counted analytically from the dense BFS slabs."""
+    out = {}
+    for n in (1_000, 8_000, 64_000, 512_000):
+        depth = max(1, int(np.ceil(np.log(n / 4) / np.log(8))))
+        fmm_pairs = sum(8 ** (l + 1) for l in range(depth))
+        bh_pairs = n * depth * 8
+        out[n] = {"fmm_pair_evals": fmm_pairs,
+                  "barnes_hut_evals": bh_pairs,
+                  "direct_evals": n * n,
+                  "fmm_per_neuron": fmm_pairs / n}
+    return out

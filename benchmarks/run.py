@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call where a wall time
+is meaningful on this host; derived = the figure's headline quantity), and
+writes the full JSON to bench_results.json.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig1 fig5  # subset
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from benchmarks import figures
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    results = {}
+    rows = []
+
+    def run(name, fn, derived_fn):
+        if want and not any(name.startswith(w) for w in want):
+            return
+        t0 = time.perf_counter()
+        res = fn()
+        dt = time.perf_counter() - t0
+        results[name] = res
+        rows.append(f"{name},{dt * 1e6:.0f},{derived_fn(res)}")
+        print(rows[-1], flush=True)
+
+    run("fig1_calcium", figures.fig1_calcium,
+        lambda r: f"ca_fmm={r['fmm']['ca_end']:.3f};target=0.7;"
+                  f"agree={r['agree']:.4f}")
+    run("fig2_synapses", figures.fig2_synapses,
+        lambda r: f"fmm_over_bh={r['fmm_over_bh']:.3f}")
+    run("fig3_strong_scaling", figures.fig3_strong_scaling,
+        lambda r: "ratios=" + "/".join(str(x) for x in r["scaling_ratios"]))
+    run("fig4_weak_scaling", figures.fig4_weak_scaling,
+        lambda r: ";".join(f"p{p}={v.get('time_200_steps_s', -1):.2f}s"
+                           for p, v in r.items()))
+    run("fig5_expansion_error", figures.fig5_expansion_error,
+        lambda r: f"hermite_max={r['hermite']['max_pct']:.4f}%;"
+                  f"taylor_max={r['taylor']['max_pct']:.4f}%;"
+                  f"bound={r['paper_bound_pct']}%")
+    run("complexity_sweep", figures.complexity_sweep,
+        lambda r: f"fmm_per_neuron@512k={r[512_000]['fmm_per_neuron']:.2f}")
+
+    with open("bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""End-to-end brain-simulation driver (the paper's workload).
+
+Features: method selection (fmm / barnes_hut / direct), paper-faithful or
+calibrated constants, periodic checkpointing with crash-safe resume, and
+multi-device execution via the distributed engine.
+
+    PYTHONPATH=src python examples/brain_sim.py --n 2000 --steps 20000
+    PYTHONPATH=src python examples/brain_sim.py --method barnes_hut
+    # multi-device (the paper's MPI layout), 4 fake host devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/brain_sim.py --devices 4
+"""
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--steps", type=int, default=10_000)
+    ap.add_argument("--method", default="fmm",
+                    choices=["fmm", "barnes_hut", "direct"])
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--paper-constants", action="store_true",
+                    help="Table 1 verbatim (see DESIGN.md §8 caveat)")
+    ap.add_argument("--speedup", type=float, default=100.0)
+    ap.add_argument("--inhibitory", type=float, default=0.0,
+                    help="fraction of inhibitory neurons (beyond-paper)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="graph-topology report at the end (paper Sec. 6 "
+                         "future work)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=5000)
+    args = ap.parse_args()
+
+    import jax
+    from repro.core.engine import EngineConfig, PlasticityEngine
+    from repro.core.msp import MSPConfig
+    from repro.core.traversal import FMMConfig
+
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 1000.0, (args.n, 3)).astype(np.float32)
+    msp_cfg = MSPConfig.paper() if args.paper_constants \
+        else MSPConfig.calibrated(speedup=args.speedup)
+
+    if args.devices > 1:
+        from jax.sharding import Mesh
+        from repro.core.distributed import DistributedPlasticityEngine
+        mesh = Mesh(np.array(jax.devices()[:args.devices]).reshape(-1),
+                    ("data",))
+        eng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg,
+                                          FMMConfig(c1=8, c2=8),
+                                          EngineConfig(method=args.method))
+    else:
+        eng = PlasticityEngine(pos, msp_cfg, FMMConfig(c1=8, c2=8),
+                               EngineConfig(method=args.method,
+                                            inhibitory_fraction=args.inhibitory))
+
+    state = eng.init_state()
+    start = 0
+    mgr = None
+    if args.ckpt_dir:
+        from repro.checkpoint.manager import CheckpointManager, latest_step
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state, start = mgr.restore(state)
+            print(f"resumed from checkpoint at step {start}")
+
+    t0 = time.time()
+    chunk = args.ckpt_every
+    step = start
+    while step < args.steps:
+        todo = min(chunk, args.steps - step)
+        state, recs = eng.simulate(state, jax.random.fold_in(
+            jax.random.key(1), step), todo)
+        jax.block_until_ready(recs.calcium_mean)
+        step += todo
+        ca = float(np.asarray(recs.calcium_mean)[-1])
+        syn = int(np.asarray(recs.num_synapses)[-1])
+        rate = float(np.asarray(recs.spike_rate)[-min(1000, todo):].mean())
+        print(f"step {step:7d}  ca={ca:.4f}  synapses={syn}  rate={rate:.4f}"
+              f"  ({(time.time() - t0):.1f}s)")
+        if mgr is not None:
+            mgr.save(state, step)
+    if mgr is not None:
+        mgr.wait()
+        mgr.close()
+    print(f"done: {args.method}, {args.steps} steps, {time.time() - t0:.1f}s")
+
+    if args.analyze:
+        from repro.core import analysis
+        rep = analysis.summarize(state.edges, eng.positions)
+        print("graph topology:")
+        for k, v in rep.items():
+            print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

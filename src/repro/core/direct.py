@@ -1,0 +1,55 @@
+"""Direct (exact) evaluation of the Gaussian attraction kernel.
+
+This is (a) the paper's O(N*M) baseline that both Barnes-Hut and the FMM
+approximate, (b) the leaf-level path of `choose_target` (Algorithm 2, the
+``direct_calculation`` branch), and (c) the oracle every approximation is
+tested against.
+
+    u(t_i) = sum_j  w_j * exp(-||t_i - s_j||^2 / delta)        (paper Eq. 8)
+
+The tiled Pallas version lives in ``repro.kernels.gaussian_nbody``; this module
+is pure jnp and intentionally simple.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_kernel(targets: jnp.ndarray, sources: jnp.ndarray,
+                    delta: float) -> jnp.ndarray:
+    """K[i, j] = exp(-||t_i - s_j||^2 / delta).  (N,3),(M,3) -> (N,M)."""
+    # d2 = |t|^2 + |s|^2 - 2 t.s  -- matmul form (MXU-friendly on TPU).
+    t2 = jnp.sum(targets * targets, axis=-1, keepdims=True)       # (N,1)
+    s2 = jnp.sum(sources * sources, axis=-1, keepdims=True).T     # (1,M)
+    cross = targets @ sources.T                                   # (N,M)
+    d2 = jnp.maximum(t2 + s2 - 2.0 * cross, 0.0)
+    return jnp.exp(-d2 / delta)
+
+
+def attraction(targets: jnp.ndarray, sources: jnp.ndarray,
+               weights: jnp.ndarray, delta: float) -> jnp.ndarray:
+    """u(t_i) = sum_j w_j K(t_i, s_j).  Exact n-body sum, O(N*M)."""
+    return pairwise_kernel(targets, sources, delta) @ weights
+
+
+def attraction_masked(targets: jnp.ndarray, sources: jnp.ndarray,
+                      weights: jnp.ndarray, source_mask: jnp.ndarray,
+                      delta: float) -> jnp.ndarray:
+    """Exact attraction with invalid sources masked out (static shapes)."""
+    w = jnp.where(source_mask, weights, 0.0)
+    return attraction(targets, sources, w, delta)
+
+
+def box_mass_direct(target_centroid: jnp.ndarray, target_count: jnp.ndarray,
+                    source_centroid: jnp.ndarray, source_weight: jnp.ndarray,
+                    delta: float) -> jnp.ndarray:
+    """Point-mass box<->box attraction: the paper's `direct_calculation`
+    when applied to interior octree nodes, which only store (count, centroid).
+
+        mass = N_axons(S) * W_dendrites(T) * K(axon_centroid, dendrite_centroid)
+
+    All args broadcast; centroids have trailing dim 3.
+    """
+    d2 = jnp.sum((target_centroid - source_centroid) ** 2, axis=-1)
+    return target_count * source_weight * jnp.exp(-d2 / delta)

@@ -1,0 +1,211 @@
+"""Distributed MSP engine: the paper's MPI decomposition on a JAX mesh.
+
+Mapping (see DESIGN.md §2 for the full assumption log):
+
+  MPI rank            -> device along the mesh's neuron axis ("data", and
+                         "pod" when multi-pod)
+  rank owns subtrees  -> device owns a contiguous Morton-sorted neuron slice
+  branch exchange     -> psum of per-device partial octree aggregates
+                         (all-reduce of the level pyramids; empty boxes
+                         contribute zeros, so partial sums are exact)
+  lazy remote fetch   -> replicated shared pyramid (prefetch-everything);
+                         the hierarchical request-routed variant for 1000+
+                         nodes is described in DESIGN.md §4
+  request exchange    -> all_gather of (partner, count) + deterministic
+                         replicated conflict resolution (bitwise identical on
+                         every device, so no answer round-trip is needed)
+
+Per activity step only ONE collective runs: a psum of the (n,) synaptic-input
+partial sums (edges live on the axon-owner device).  The connectivity update
+(every 100 steps) runs the pyramid psum + request all_gather — the analogue of
+the paper's O(n/p + p) phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import barnes_hut, msp, octree, synapses, traversal
+from repro.core.engine import (EngineConfig, PlasticityEngine, SimState,
+                               StepRecord)
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+
+
+class DistributedPlasticityEngine(PlasticityEngine):
+    """Shards neurons/edges over `axis` of `mesh`; positions stay replicated.
+
+    Neurons are pre-sorted by Morton code so each device owns contiguous
+    subtrees, exactly like the paper's rank-owns-subtrees layout.
+    """
+
+    def __init__(self, positions: np.ndarray, mesh: Mesh, axis: str = "data",
+                 msp_cfg: MSPConfig = MSPConfig(),
+                 fmm_cfg: FMMConfig = FMMConfig(),
+                 engine_cfg: EngineConfig = EngineConfig()):
+        positions = np.asarray(positions, np.float32)
+        self.mesh = mesh
+        self.axis = axis
+        self.num_shards = mesh.shape[axis]
+        if positions.shape[0] % self.num_shards:
+            raise ValueError("n must divide the neuron axis size")
+        # Pre-sort by Morton code -> contiguous subtree ownership.
+        tmp = octree.build_structure(positions, engine_cfg.domain,
+                                     engine_cfg.depth)
+        positions = positions[tmp.order]
+        super().__init__(positions, msp_cfg, fmm_cfg, engine_cfg)
+
+    # -- sharded state ------------------------------------------------------
+    def _specs(self) -> Tuple[SimState, StepRecord]:
+        sh = P(self.axis)
+        state_spec = SimState(
+            neurons=msp.NeuronState(*(sh,) * 6),
+            edges=synapses.SynapseState(sh, sh, sh),
+            step=P(), dropped=P())
+        rec_spec = StepRecord(P(), P(), P(), P())
+        return state_spec, rec_spec
+
+    # -- local-shard phases ---------------------------------------------------
+    def _local_pyramid(self, lo: jnp.ndarray, positions_local, ax_vac, den_vac):
+        """Per-device partial pyramid from local neurons + psum merge.
+
+        Every LevelData field is a weighted segment-sum about *static* box
+        centers (see octree.build_level), so the cross-device merge — the
+        paper's branch exchange — is an exact psum of raw sums; centroids are
+        renormalised after the merge.
+        """
+        n_local = positions_local.shape[0]
+        levels = []
+        for l in range(self.structure.depth + 1):
+            full_ids = jnp.asarray(self.structure.box_of(l))
+            ids = jax.lax.dynamic_slice_in_dim(full_ids, lo, n_local)
+            centers = jnp.asarray(self.structure.centers_at(l))
+            lvl = octree.build_level(ids, self.structure.boxes_at(l), centers,
+                                     positions_local, ax_vac, den_vac,
+                                     self.fmm_cfg.delta, self.fmm_cfg.p)
+            den_pos = lvl.den_c * lvl.den_w[:, None]
+            ax_pos = lvl.ax_c * lvl.ax_w[:, None]
+            den_w = jax.lax.psum(lvl.den_w, self.axis)
+            ax_w = jax.lax.psum(lvl.ax_w, self.axis)
+            den_c = jax.lax.psum(den_pos, self.axis) / jnp.maximum(den_w, 1e-30)[:, None]
+            ax_c = jax.lax.psum(ax_pos, self.axis) / jnp.maximum(ax_w, 1e-30)[:, None]
+            levels.append(octree.LevelData(
+                den_w=den_w, ax_w=ax_w, den_c=den_c, ax_c=ax_c, gc=centers,
+                herm=jax.lax.psum(lvl.herm, self.axis),
+                moms=jax.lax.psum(lvl.moms, self.axis)))
+        return levels
+
+    def make_sharded_step(self):
+        """Returns a jitted sharded step: (state, key) -> (state, record)."""
+        struct = self.structure
+        n, axis, nshards = self.n, self.axis, self.num_shards
+        n_local = n // nshards
+        cfg, fcfg, ecfg = self.msp_cfg, self.fmm_cfg, self.engine_cfg
+        positions_g = self.positions           # replicated (static)
+
+        def local_step(state: SimState, key: jax.Array):
+            rank = jax.lax.axis_index(axis)
+            lo = rank * n_local
+            pos_local = jax.lax.dynamic_slice_in_dim(positions_g, lo, n_local)
+
+            # --- phase 1+2: activity (one psum for synaptic input) ---
+            partial_in = jax.ops.segment_sum(
+                (state.edges.valid & state.neurons.spiked[
+                    jnp.clip(state.edges.src - lo, 0, n_local - 1)]
+                 & (state.edges.src >= lo)
+                 & (state.edges.src < lo + n_local)).astype(jnp.float32),
+                state.edges.dst, num_segments=n)
+            syn_in_g = jax.lax.psum(partial_in, axis)
+            syn_in = jax.lax.dynamic_slice_in_dim(syn_in_g, lo, n_local)
+            kact = jax.random.fold_in(key, 1)
+            neurons = msp.step_neurons(state.neurons, syn_in, kact, cfg)
+            state = state._replace(neurons=neurons, step=state.step + 1)
+
+            def conn_update(state: SimState) -> SimState:
+                kdel, kfind, kconf = jax.random.split(jax.random.fold_in(key, 2), 3)
+                # Deletion needs global edge view for the dst side: gather.
+                edges_g = synapses.SynapseState(
+                    *(jax.lax.all_gather(x, axis, tiled=True)
+                      for x in state.edges))
+                elems_g = tuple(jax.lax.all_gather(x, axis, tiled=True)
+                                for x in (neurons.ax_elems, neurons.den_elems))
+                edges_g = synapses.delete_excess(edges_g, *elems_g, kdel)
+                out_deg = synapses.out_degree(edges_g, n)
+                in_deg = synapses.in_degree(edges_g, n)
+                ax_vac_g = jnp.maximum(jnp.floor(elems_g[0]).astype(jnp.int32)
+                                       - out_deg, 0).astype(jnp.float32)
+                den_vac_g = jnp.maximum(jnp.floor(elems_g[1]).astype(jnp.int32)
+                                        - in_deg, 0).astype(jnp.float32)
+
+                ax_vac_l = jax.lax.dynamic_slice_in_dim(ax_vac_g, lo, n_local)
+                den_vac_l = jax.lax.dynamic_slice_in_dim(den_vac_g, lo, n_local)
+                levels = self._local_pyramid(lo, pos_local, ax_vac_l, den_vac_l)
+
+                if ecfg.method == "fmm":
+                    partner = traversal.find_partners(
+                        struct, levels, positions_g, ax_vac_g, den_vac_g,
+                        kfind, fcfg)
+                else:
+                    partner = barnes_hut.find_partners_bh(
+                        struct, levels, positions_g, ax_vac_g, den_vac_g,
+                        kfind, fcfg)
+
+                req = jnp.minimum(ax_vac_g.astype(jnp.int32),
+                                  ecfg.max_requests_per_neuron)
+                req = jnp.where(partner >= 0, req, 0)
+                accepted = synapses.resolve_conflicts(
+                    partner, req, den_vac_g.astype(jnp.int32), kconf)
+                # Each device commits only its local axons' edges.
+                acc_l = jax.lax.dynamic_slice_in_dim(accepted, lo, n_local)
+                part_l = jax.lax.dynamic_slice_in_dim(partner, lo, n_local)
+                local_edges = synapses.SynapseState(
+                    *(jax.lax.dynamic_slice_in_dim(x, rank * (x.shape[0] // nshards),
+                                                   x.shape[0] // nshards)
+                      for x in edges_g))
+                # Re-express local src ids in global terms (already global).
+                new_edges, dropped = synapses.insert(
+                    local_edges,
+                    jnp.where(part_l >= 0, part_l, -1),
+                    acc_l, ecfg.max_requests_per_neuron)
+                # insert() writes unit src ids 0..n_local-1; shift to global.
+                shift = (new_edges.valid & ~local_edges.valid)
+                fixed_src = jnp.where(shift, new_edges.src + lo, new_edges.src)
+                new_edges = new_edges._replace(src=fixed_src)
+                return state._replace(edges=new_edges,
+                                      dropped=state.dropped + dropped)
+
+            do_update = (state.step % cfg.update_interval) == 0
+            state = jax.lax.cond(do_update, conn_update, lambda s: s, state)
+
+            ca_sum = jax.lax.psum(jnp.sum(neurons.calcium), axis)
+            ca2_sum = jax.lax.psum(jnp.sum(neurons.calcium ** 2), axis)
+            mean = ca_sum / n
+            std = jnp.sqrt(jnp.maximum(ca2_sum / n - mean ** 2, 0.0))
+            nsyn = jax.lax.psum(jnp.sum(state.edges.valid.astype(jnp.int32)), axis)
+            rate = jax.lax.psum(jnp.sum(neurons.spiked.astype(jnp.float32)), axis) / n
+            rec = StepRecord(mean, std, nsyn, rate)
+            return state, rec
+
+        state_spec, rec_spec = self._specs()
+        sharded = shard_map(local_step, mesh=self.mesh,
+                            in_specs=(state_spec, P()),
+                            out_specs=(state_spec, rec_spec),
+                            check_rep=False)
+        return jax.jit(sharded)
+
+    @functools.partial(jax.jit, static_argnums=(0, 3))
+    def simulate(self, state: SimState, key: jax.Array, num_steps: int):
+        step = self.make_sharded_step()
+
+        def body(st, i):
+            st, rec = step(st, jax.random.fold_in(key, i))
+            return st, rec
+        return jax.lax.scan(body, state,
+                            jnp.arange(num_steps, dtype=jnp.int32))

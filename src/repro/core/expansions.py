@@ -1,0 +1,304 @@
+"""Hermite and Taylor expansions of the Gaussian attraction kernel.
+
+Implements the paper's Eq. 6 (Taylor) and Eq. 7 (Hermite) — the fast Gauss
+transform machinery of Greengard & Strain — plus the Hermite->Taylor (M2L)
+translation that makes box<->box attraction masses O(k^2) instead of
+O(k * |subtree|) per pair.
+
+Conventions
+-----------
+* ``delta``: the Gaussian denominator, K(t,s) = exp(-||t-s||^2/delta).
+  The paper sets delta = sigma^2 (Sec. 3.3 / Eq. 8) with sigma = 750 from the
+  MSP.  (Eq. 1 divides by sigma; the two differ only by a rescaling of space —
+  we follow Eq. 8, and `MSPConfig.kernel_scale` can select either.)
+* ``p``: terms per dimension; the paper truncates at alpha = beta = (3,3,3),
+  i.e. p = 4, k = p^3 = 64 coefficients.
+
+Hermite expansion about a source-box centroid sC (paper Eq. 7):
+
+    u(t)    = sum_alpha A_alpha * h_alpha((t - sC)/sqrt(delta))
+    A_alpha = 1/alpha! * sum_j w_j * ((s_j - sC)/sqrt(delta))^alpha
+
+Taylor expansion about a target-box centroid tC (paper Eq. 6):
+
+    u(t)   = sum_beta B_beta * ((t - tC)/sqrt(delta))^beta
+    B_beta = (-1)^{|beta|}/beta! * sum_j w_j * h_beta((s_j - tC)/sqrt(delta))
+
+M2L: given A_alpha about sC, the Taylor coefficients about tC are
+
+    B_beta = (-1)^{|beta|}/beta! * sum_alpha A_alpha * h_{alpha+beta}((sC - tC)/sqrt(delta))
+
+(Greengard & Strain Lemma 2.2 adapted; note our A already carries 1/alpha!.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import multi_index as mi
+from repro.core.multi_index import DEFAULT_ORDER
+
+
+# ---------------------------------------------------------------------------
+# Coefficients from raw points
+# ---------------------------------------------------------------------------
+
+def hermite_coefficients(sources: jnp.ndarray, weights: jnp.ndarray,
+                         center: jnp.ndarray, delta: float,
+                         p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """A_alpha (Eq. 7).  sources (M,3), weights (M,), center (3,) -> (p^3,)."""
+    scaled = (sources - center) / jnp.sqrt(delta)
+    feats = mi.monomials(scaled, p)                       # (M, k)
+    coeff = weights @ feats                               # (k,)
+    return coeff / jnp.asarray(mi.multi_factorial(p), coeff.dtype)
+
+
+def taylor_coefficients(sources: jnp.ndarray, weights: jnp.ndarray,
+                        center: jnp.ndarray, delta: float,
+                        p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """B_beta (Eq. 6).  Formed directly from source points about a target
+    center."""
+    # NOTE: the paper's Eq. 6 carries Greengard-Strain's (-1)^{|beta|} but
+    # flips the Hermite argument to (s_j - t_C); the two changes cancel.
+    # Deriving from scratch:  B_beta = 1/beta! * sum_j w_j h_beta((s_j-tC)/sqrt(delta))
+    # with NO sign factor (see tests/test_expansions.py::test_taylor_matches_direct).
+    scaled = (sources - center) / jnp.sqrt(delta)
+    feats = mi.hermites(scaled, p)                        # (M, k)
+    coeff = weights @ feats                               # (k,)
+    fact = jnp.asarray(mi.multi_factorial(p), coeff.dtype)
+    return coeff / fact
+
+
+# ---------------------------------------------------------------------------
+# Evaluation at points
+# ---------------------------------------------------------------------------
+
+def eval_hermite(coeff: jnp.ndarray, targets: jnp.ndarray,
+                 center: jnp.ndarray, delta: float,
+                 p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """u(t) = sum_alpha A_alpha h_alpha((t - sC)/sqrt(delta)).  -> (N,)."""
+    scaled = (targets - center) / jnp.sqrt(delta)
+    feats = mi.hermites(scaled, p)                        # (N, k)
+    return feats @ coeff
+
+
+def eval_taylor(coeff: jnp.ndarray, targets: jnp.ndarray,
+                center: jnp.ndarray, delta: float,
+                p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """u(t) = sum_beta B_beta ((t - tC)/sqrt(delta))^beta.  -> (N,)."""
+    scaled = (targets - center) / jnp.sqrt(delta)
+    feats = mi.monomials(scaled, p)                       # (N, k)
+    return feats @ coeff
+
+
+# ---------------------------------------------------------------------------
+# Translations
+# ---------------------------------------------------------------------------
+
+def m2l(coeff_hermite: jnp.ndarray, source_center: jnp.ndarray,
+        target_center: jnp.ndarray, delta: float,
+        p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """Hermite -> Taylor translation (one box pair).
+
+    coeff_hermite: (k,) about source_center.  Returns (k,) Taylor coefficients
+    about target_center.  Batched via vmap in the traversal.
+    """
+    # B_beta = 1/beta! * sum_alpha A_alpha (-1)^{|alpha|} h_{alpha+beta}((sC-tC)/sqrt(delta))
+    # (sign on |alpha|, from d^beta/dt^beta h_alpha = (-1)^{|beta|} h_{alpha+beta}
+    #  plus the parity flip of the argument).
+    y = (source_center - target_center) / jnp.sqrt(delta)
+    hbig = mi.hermite_big(y, p)                           # ((2p-1)^3,)
+    idx = jnp.asarray(mi.m2l_index_map(p))                # (k, k): beta, alpha
+    hmat = hbig[idx]                                      # (k_beta, k_alpha)
+    sign = jnp.asarray(mi.sign_table(p), coeff_hermite.dtype)
+    raw = hmat @ (coeff_hermite * sign)                   # (k_beta,)
+    fact = jnp.asarray(mi.multi_factorial(p), raw.dtype)
+    return raw / fact
+
+
+def m2m(coeff_child: jnp.ndarray, child_center: jnp.ndarray,
+        parent_center: jnp.ndarray, delta: float,
+        p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """Hermite -> Hermite (child box to parent box) re-centering.
+
+    A'_alpha = sum_{beta <= alpha} A_beta * y^{alpha-beta} / (alpha-beta)!
+    with y = (child_center - parent_center)/sqrt(delta).
+
+    Used by the upward pass when merging child expansions instead of
+    recomputing from points (the O(n log n) -> O(n) trick; both paths are
+    implemented and tested against each other).
+    """
+    import numpy as np
+    y = (child_center - parent_center) / jnp.sqrt(delta)
+    pw = mi.monomials(y, p)                               # (k,) monomials of y
+    fact = np.asarray(mi.multi_factorial(p))
+    midx = mi.multi_indices(p).astype(np.int64)
+    # T[alpha, beta] = y^{alpha-beta}/(alpha-beta)!  where beta <= alpha.
+    diff = midx[:, None, :] - midx[None, :, :]            # (k, k, 3)
+    valid = np.all(diff >= 0, axis=-1)
+    # flat index of (alpha - beta) where valid
+    pcube = p
+    flat = (diff[..., 0] * pcube + diff[..., 1]) * pcube + diff[..., 2]
+    flat = np.where(valid, flat, 0)
+    # (alpha-beta)! lookup: factorial of the flat multi-index
+    fac_lookup = fact[flat] * valid                       # zero where invalid
+    tmat = pw[jnp.asarray(flat)] * jnp.asarray(
+        np.where(valid, 1.0 / np.maximum(fac_lookup, 1e-30), 0.0),
+        pw.dtype)
+    return tmat @ coeff_child
+
+
+def moment_shift(moms: jnp.ndarray, child_center: jnp.ndarray,
+                 parent_center: jnp.ndarray, delta: float,
+                 p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """Re-center raw monomial moments (binomial theorem — EXACT):
+
+        M'_beta = sum_{gamma <= beta} C(beta, gamma) y^{beta-gamma} M_gamma,
+        y = (child_center - parent_center)/sqrt(delta).
+
+    Used by the M2M upward pass to merge child axon moments into parents.
+    """
+    import numpy as np
+    y = (child_center - parent_center) / jnp.sqrt(delta)
+    pw = mi.monomials(y, p)                               # (k,)
+    midx = mi.multi_indices(p).astype(np.int64)
+    diff = midx[:, None, :] - midx[None, :, :]            # (beta, gamma, 3)
+    valid = np.all(diff >= 0, axis=-1)
+    flat = (diff[..., 0] * p + diff[..., 1]) * p + diff[..., 2]
+    flat = np.where(valid, flat, 0)
+    fac = np.asarray(mi.multi_factorial(p))
+    # C(beta, gamma) = beta! / (gamma! (beta-gamma)!)
+    binom = fac[:, None] / (fac[None, :] * np.maximum(fac[flat], 1.0))
+    tmat = pw[jnp.asarray(flat)] * jnp.asarray(
+        np.where(valid, binom, 0.0), pw.dtype)            # (k_beta, k_gamma)
+    return tmat @ moms
+
+
+# ---------------------------------------------------------------------------
+# Box <-> box attraction masses (what `choose_target` needs)
+# ---------------------------------------------------------------------------
+
+def axon_moments(positions: jnp.ndarray, counts: jnp.ndarray,
+                 centroid: jnp.ndarray, delta: float,
+                 p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """Target-side (axon) monomial moments of a box about its axon centroid:
+
+        M_beta(S) = sum_{i in S} a_i * ((t_i - tC)/sqrt(delta))^beta
+
+    Contracting Taylor coefficients against these gives the *exact* (up to
+    truncation) total attraction felt by every vacant axon in the box —
+    the quantity Algorithm 2 samples from.
+    """
+    scaled = (positions - centroid) / jnp.sqrt(delta)
+    feats = mi.monomials(scaled, p)                       # (N, k)
+    return counts @ feats                                 # (k,)
+
+
+def box_mass_hermite(axon_count, axon_centroid, hermite_coeff,
+                     dendrite_centroid, delta, p: int = DEFAULT_ORDER):
+    """Paper's `calculate_hermite_expansion` path for interior nodes:
+    evaluate the dendrite-side Hermite expansion at the axon centroid and
+    scale by the number of vacant axons.  O(k) per pair."""
+    u = eval_hermite(hermite_coeff, axon_centroid[None, :],
+                     dendrite_centroid, delta, p)[0]
+    return axon_count * u
+
+
+def box_mass_taylor(axon_moms, axon_centroid, hermite_coeff,
+                    dendrite_centroid, delta, p: int = DEFAULT_ORDER):
+    """Paper's `calculate_taylor_expansion` path: translate the dendrite
+    Hermite expansion into a Taylor (local) expansion about the axon centroid
+    (M2L) and contract against the axon-side moments.  O(k^2) per pair, exact
+    in the axon spread up to truncation order."""
+    b = m2l(hermite_coeff, dendrite_centroid, axon_centroid, delta, p)
+    return axon_moms @ b
+
+
+# ---------------------------------------------------------------------------
+# Log-factored box masses (underflow-safe; used by the traversal)
+# ---------------------------------------------------------------------------
+#
+# With sigma = 750 and domains of a few thousand micrometres, far box pairs
+# have exp(-d^2/delta) underflowing f32.  The stochastic descent only needs
+# *relative* masses among 8 siblings, so we carry log-mass:
+#     log m = -||y||^2 + log(series(y))     y = (tC - sC)/sqrt(delta)
+# where the series uses envelope-free Hermite polynomials.
+
+_LOG_EPS = 1e-30
+
+
+def box_mass_direct_log(axon_count, axon_centroid, dendrite_weight,
+                        dendrite_centroid, delta):
+    """log of the point-mass direct box<->box attraction (batched)."""
+    d2 = jnp.sum((axon_centroid - dendrite_centroid) ** 2, axis=-1)
+    return (jnp.log(jnp.maximum(axon_count, _LOG_EPS))
+            + jnp.log(jnp.maximum(dendrite_weight, _LOG_EPS))
+            - d2 / delta)
+
+
+def box_mass_hermite_log(axon_count, axon_centroid, hermite_coeff,
+                         dendrite_centroid, delta, p: int = DEFAULT_ORDER):
+    """log of `box_mass_hermite`, batched over leading axes.
+
+    hermite_coeff: (..., k).  centroids: (..., 3).
+    """
+    y = (axon_centroid - dendrite_centroid) / jnp.sqrt(delta)
+    polys = mi.hermite_polys(y, p)                        # (..., k)
+    series = jnp.sum(polys * hermite_coeff, axis=-1)
+    return (jnp.log(jnp.maximum(axon_count, _LOG_EPS))
+            - jnp.sum(y * y, axis=-1)
+            + jnp.log(jnp.maximum(series, _LOG_EPS)))
+
+
+def box_mass_taylor_log_dense(axon_moms, axon_centroid, hermite_coeff,
+                              dendrite_centroid, delta, p: int = DEFAULT_ORDER):
+    """log of `box_mass_taylor`, batched — dense (k x k) M2L reference.
+
+    axon_moms/hermite_coeff: (..., k).  The M2L Hermite factor
+    h_{alpha+beta}(y) = exp(-||y||^2) H_{alpha+beta}(y) has its envelope pulled
+    out so only polynomial magnitudes enter the contraction.  Materialises the
+    (..., k, k) translation matrix — kept as the tested oracle for the
+    separable fast path below.
+    """
+    y = (dendrite_centroid - axon_centroid) / jnp.sqrt(delta)
+    hbig = mi.hermite_polys_big(y, p)                     # (..., (2p-1)^3)
+    idx = jnp.asarray(mi.m2l_index_map(p))                # (k, k)
+    hmat = hbig[..., idx]                                 # (..., k_beta, k_alpha)
+    sign = jnp.asarray(mi.sign_table(p), hmat.dtype)
+    fact = jnp.asarray(mi.multi_factorial(p), hmat.dtype)
+    b_poly = jnp.einsum('...ba,...a->...b', hmat, hermite_coeff * sign) / fact
+    series = jnp.sum(axon_moms * b_poly, axis=-1)
+    return (- jnp.sum(y * y, axis=-1)
+            + jnp.log(jnp.maximum(series, _LOG_EPS)))
+
+
+def box_mass_taylor_log(axon_moms, axon_centroid, hermite_coeff,
+                        dendrite_centroid, delta, p: int = DEFAULT_ORDER):
+    """log of `box_mass_taylor` via the SEPARABLE M2L (beyond-paper opt #1).
+
+    The translation tensor factorises over dimensions,
+        h_{alpha+beta}(y) = prod_d h_{a_d+b_d}(y_d),
+    so the (k x k) contraction collapses into three mode-products with (p x p)
+    Hankel matrices G_d[a,b] = H_{a+b}(y_d): O(3 p^4) = 768 MACs per pair
+    instead of O(p^6) = 4096, and no (..., k, k) workspace — this removed the
+    Taylor-tier chunking entirely (see EXPERIMENTS.md §Perf, core-iteration 1).
+    """
+    y = (dendrite_centroid - axon_centroid) / jnp.sqrt(delta)
+    big_p = 2 * p - 1
+    hd = mi._per_dim_hermite_poly(y, big_p)               # (..., 3, 2p-1)
+    import numpy as np
+    a_idx = np.arange(p)
+    hank = a_idx[:, None] + a_idx[None, :]                # (p, p): a + b
+    g = hd[..., jnp.asarray(hank)]                        # (..., 3, p, p)
+
+    sign = jnp.asarray(mi.sign_table(p), g.dtype)
+    fact = jnp.asarray(mi.multi_factorial(p), g.dtype)
+    # moms/beta! as a (p,p,p) tensor, contracted mode-by-mode with G_d.
+    t = (axon_moms / fact).reshape(axon_moms.shape[:-1] + (p, p, p))
+    t = jnp.einsum('...ab,...bcd->...acd', g[..., 0, :, :], t)
+    t = jnp.einsum('...ab,...cbd->...cad', g[..., 1, :, :], t)
+    t = jnp.einsum('...ab,...cdb->...cda', g[..., 2, :, :], t)
+    asign = (hermite_coeff * sign).reshape(hermite_coeff.shape[:-1] + (p, p, p))
+    series = jnp.sum(asign * t, axis=(-3, -2, -1))
+    return (- jnp.sum(y * y, axis=-1)
+            + jnp.log(jnp.maximum(series, _LOG_EPS)))

@@ -1,0 +1,174 @@
+"""Multi-index algebra and Hermite functions for the fast Gauss transform.
+
+The paper (Sec. 3.3) expands the Gaussian attraction kernel
+
+    K(t, s) = exp(-||t - s||^2 / delta)
+
+in truncated Hermite (Eq. 7) and Taylor (Eq. 6) series over 3D multi-indices
+``alpha = (n1, n2, n3)`` with ``0 <= n_i < p``.  With the paper's cut-off
+``p = 4`` (i.e. alpha up to (3,3,3)) there are ``p**3 = 64`` coefficients.
+
+Everything in this module is shape-static and jit-friendly: multi-index
+enumeration happens at trace time (numpy), per-point feature matrices are
+computed with cumulative products + gathers so they lower to dense vector ops
+(and, padded to 128 lanes, feed the MXU in the Pallas kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# Paper cut-off: alpha = beta = (3,3,3)  ->  p = 4 terms per dimension.
+DEFAULT_ORDER = 4
+
+
+@functools.lru_cache(maxsize=None)
+def multi_indices(p: int = DEFAULT_ORDER) -> np.ndarray:
+    """All 3D multi-indices with 0 <= n_i < p, shape (p**3, 3), C-order."""
+    idx = np.indices((p, p, p)).reshape(3, -1).T
+    return np.ascontiguousarray(idx.astype(np.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def factorial_table(p: int = DEFAULT_ORDER) -> np.ndarray:
+    """n! for n = 0..p-1."""
+    out = np.ones((p,), dtype=np.float64)
+    for n in range(1, p):
+        out[n] = out[n - 1] * n
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def multi_factorial(p: int = DEFAULT_ORDER) -> np.ndarray:
+    """alpha! = n1! * n2! * n3! for every multi-index, shape (p**3,)."""
+    fac = factorial_table(p)
+    mi = multi_indices(p)
+    return fac[mi[:, 0]] * fac[mi[:, 1]] * fac[mi[:, 2]]
+
+
+@functools.lru_cache(maxsize=None)
+def multi_abs(p: int = DEFAULT_ORDER) -> np.ndarray:
+    """|alpha| = n1 + n2 + n3, shape (p**3,)."""
+    return multi_indices(p).sum(axis=1)
+
+
+@functools.lru_cache(maxsize=None)
+def sign_table(p: int = DEFAULT_ORDER) -> np.ndarray:
+    """(-1)^{|alpha|}, shape (p**3,)."""
+    return np.where(multi_abs(p) % 2 == 0, 1.0, -1.0)
+
+
+def _per_dim_powers(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """x**n for n = 0..p-1 per dimension.  x: (..., 3) -> (..., 3, p)."""
+    ones = jnp.ones_like(x)[..., None]                       # (..., 3, 1)
+    steps = [ones]
+    for _ in range(p - 1):
+        steps.append(steps[-1] * x[..., None])
+    return jnp.concatenate(steps, axis=-1)                   # (..., 3, p)
+
+
+def monomials(x: jnp.ndarray, p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """x^alpha for every multi-index.  x: (..., 3) -> (..., p**3).
+
+    x^alpha = x1^n1 * x2^n2 * x3^n3  (paper Eq. 5).
+    """
+    pw = _per_dim_powers(x, p)                               # (..., 3, p)
+    mi = multi_indices(p)
+    return (pw[..., 0, mi[:, 0]]
+            * pw[..., 1, mi[:, 1]]
+            * pw[..., 2, mi[:, 2]])
+
+
+def _per_dim_hermite(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Hermite functions h_n(t) = (-1)^n d^n/dt^n exp(-t^2), n = 0..p-1.
+
+    Recurrence (Greengard & Strain, "The fast Gauss transform"):
+        h_0(t)     = exp(-t^2)
+        h_1(t)     = 2 t exp(-t^2)
+        h_{n+1}(t) = 2 t h_n(t) - 2 n h_{n-1}(t)
+
+    x: (..., 3) -> (..., 3, p)
+    """
+    h0 = jnp.exp(-x * x)
+    steps = [h0]
+    if p > 1:
+        steps.append(2.0 * x * h0)
+    for n in range(1, p - 1):
+        steps.append(2.0 * x * steps[-1] - 2.0 * n * steps[-2])
+    return jnp.stack(steps, axis=-1)                         # (..., 3, p)
+
+
+def hermites(x: jnp.ndarray, p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """h_alpha(x) = h_n1(x1) h_n2(x2) h_n3(x3).  x: (..., 3) -> (..., p**3)."""
+    hd = _per_dim_hermite(x, p)                              # (..., 3, p)
+    mi = multi_indices(p)
+    return (hd[..., 0, mi[:, 0]]
+            * hd[..., 1, mi[:, 1]]
+            * hd[..., 2, mi[:, 2]])
+
+
+def _per_dim_hermite_poly(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Physicists' Hermite polynomials H_n(t) (no exp envelope), n = 0..p-1.
+
+    h_n(t) = exp(-t^2) H_n(t); same recurrence with H_0 = 1.
+    """
+    h0 = jnp.ones_like(x)
+    steps = [h0]
+    if p > 1:
+        steps.append(2.0 * x)
+    for n in range(1, p - 1):
+        steps.append(2.0 * x * steps[-1] - 2.0 * n * steps[-2])
+    return jnp.stack(steps, axis=-1)                         # (..., 3, p)
+
+
+def hermite_polys(x: jnp.ndarray, p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """H_alpha(x) = prod_d H_{n_d}(x_d), so that
+
+        h_alpha(x) = exp(-||x||^2) * H_alpha(x).
+
+    Factoring the envelope out lets callers work in log space: for boxes far
+    apart, exp(-||x||^2) underflows in f32 (sigma = 750 vs km-scale domains),
+    but log-mass = -||x||^2 + log(series) stays exact.  x: (...,3)->(...,p**3).
+    """
+    hd = _per_dim_hermite_poly(x, p)                         # (..., 3, p)
+    mi = multi_indices(p)
+    return (hd[..., 0, mi[:, 0]]
+            * hd[..., 1, mi[:, 1]]
+            * hd[..., 2, mi[:, 2]])
+
+
+def hermite_polys_big(x: jnp.ndarray, p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """H_gamma(x) for gamma up to order 2(p-1) (log-factored M2L)."""
+    return hermite_polys(x, 2 * p - 1)
+
+
+@functools.lru_cache(maxsize=None)
+def m2l_index_map(p: int = DEFAULT_ORDER) -> np.ndarray:
+    """Index map for the Hermite->Taylor (M2L) translation.
+
+    B_beta = (-1)^{|beta|} / beta! * sum_alpha  A_alpha * h_{alpha+beta}(y)
+
+    needs h at combined orders up to 2(p-1).  This returns, for every
+    (beta, alpha) pair, the flat index of (alpha+beta) in the order-(2p-1)
+    multi-index enumeration.  Shape (p**3, p**3), int32.
+    """
+    big_p = 2 * p - 1
+    mi = multi_indices(p).astype(np.int64)
+    comb = mi[:, None, :] + mi[None, :, :]                   # (beta, alpha, 3)
+    flat = (comb[..., 0] * big_p + comb[..., 1]) * big_p + comb[..., 2]
+    return flat.astype(np.int32)
+
+
+def hermite_big(x: jnp.ndarray, p: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """h_gamma(x) for gamma up to order 2(p-1): needed by the M2L translation.
+
+    x: (..., 3) -> (..., (2p-1)**3) in the order-(2p-1) enumeration.
+    """
+    return hermites(x, 2 * p - 1)
+
+
+def num_coefficients(p: int = DEFAULT_ORDER) -> int:
+    return p ** 3

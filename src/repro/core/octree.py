@@ -1,0 +1,276 @@
+"""Morton-coded linear octree pyramid.
+
+The paper uses a pointer-based distributed octree subdivided until each leaf
+holds one neuron.  On TPU we need static shapes, so we use a *dense pyramid*:
+
+* the simulation domain [0, L)^3 is divided into 8^l boxes at level l,
+  l = 0..depth; a neuron's box id at level l is its Morton code shifted right
+  by 3*(depth-l) bits;
+* neuron positions are FIXED for the whole simulation (only vacancies change),
+  so the structure (codes, sort order, leaf offsets) is computed once in numpy
+  and the per-connectivity-update work is pure segment-sum aggregation — fully
+  jittable and shardable;
+* inner boxes store exactly what the paper's 264-byte nodes store — vacant
+  counts and centroids for BOTH dendrites and axons — plus (our FGT upgrade)
+  the order-p Hermite coefficients of the dendrite distribution and the
+  monomial moments of the axon distribution.
+
+Sharding: boxes at level l are contiguous Morton ranges, so "device d owns
+subtree roots [d*k, (d+1)*k) at the shared level" is a plain equal slice of
+every per-level array — the same layout the paper's MPI decomposition uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import expansions as ex
+from repro.core import multi_index as mi
+from repro.core.multi_index import DEFAULT_ORDER
+
+
+# ---------------------------------------------------------------------------
+# Static structure (numpy, built once)
+# ---------------------------------------------------------------------------
+
+def _spread_bits(v: np.ndarray) -> np.ndarray:
+    """Spread the low 21 bits of v so there are two zero bits between each."""
+    v = v.astype(np.uint64) & np.uint64(0x1FFFFF)
+    v = (v | (v << np.uint64(32))) & np.uint64(0x1F00000000FFFF)
+    v = (v | (v << np.uint64(16))) & np.uint64(0x1F0000FF0000FF)
+    v = (v | (v << np.uint64(8))) & np.uint64(0x100F00F00F00F00F)
+    v = (v | (v << np.uint64(4))) & np.uint64(0x10C30C30C30C30C3)
+    v = (v | (v << np.uint64(2))) & np.uint64(0x1249249249249249)
+    return v
+
+
+def morton_encode(cells: np.ndarray) -> np.ndarray:
+    """Interleave (x, y, z) integer cell coords -> Morton codes.  (N,3)->(N,)."""
+    return (_spread_bits(cells[:, 0])
+            | (_spread_bits(cells[:, 1]) << np.uint64(1))
+            | (_spread_bits(cells[:, 2]) << np.uint64(2))).astype(np.int64)
+
+
+def _compact_bits(v: np.ndarray) -> np.ndarray:
+    """Inverse of _spread_bits: keep every third bit (Morton decode helper)."""
+    v = v.astype(np.uint64) & np.uint64(0x1249249249249249)
+    v = (v ^ (v >> np.uint64(2))) & np.uint64(0x10C30C30C30C30C3)
+    v = (v ^ (v >> np.uint64(4))) & np.uint64(0x100F00F00F00F00F)
+    v = (v ^ (v >> np.uint64(8))) & np.uint64(0x1F0000FF0000FF)
+    v = (v ^ (v >> np.uint64(16))) & np.uint64(0x1F00000000FFFF)
+    v = (v ^ (v >> np.uint64(32))) & np.uint64(0x1FFFFF)
+    return v.astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class OctreeStructure:
+    """Immutable per-simulation octree layout (numpy; not traced)."""
+    depth: int                       # leaf level
+    domain: float                    # cube side length
+    n: int                           # number of neurons
+    codes: np.ndarray                # (n,) Morton code at leaf level
+    order: np.ndarray                # (n,) permutation sorting neurons by code
+    inv_order: np.ndarray            # (n,) inverse permutation
+    leaf_of: np.ndarray              # (n,) leaf box id per neuron (unsorted ids)
+    leaf_start: np.ndarray           # (8^depth + 1,) offsets into `order`
+    max_leaf: int                    # max neurons in any leaf
+
+    @property
+    def num_leaves(self) -> int:
+        return 8 ** self.depth
+
+    def boxes_at(self, level: int) -> int:
+        return 8 ** level
+
+    def box_of(self, level: int) -> np.ndarray:
+        """Box id per neuron at `level`."""
+        return (self.leaf_of >> (3 * (self.depth - level))).astype(np.int32)
+
+    def box_side(self, level: int) -> float:
+        return self.domain / (2 ** level)
+
+    def occupied_at(self, level: int) -> np.ndarray:
+        """Sorted ids of boxes that contain at least one neuron — static,
+        because positions never move.  The descent iterates these instead of
+        the dense 8^l slab (occupancy is ~13% at the leaf level for uniform
+        soma placement: a ~7x work cut, EXPERIMENTS.md §Perf core-iter 4)."""
+        return np.unique(self.box_of(level))
+
+    def centers_at(self, level: int) -> np.ndarray:
+        """Static geometric centers of all boxes at `level`, shape (8^l, 3).
+
+        Expansions are formed about these (Greengard & Strain use box centers
+        too): unlike mass centroids they are data-independent, which makes the
+        distributed partial-sum merge (paper's branch exchange) exact.
+        """
+        b = self.boxes_at(level)
+        ids = np.arange(b, dtype=np.int64)
+        cells = np.stack([_compact_bits(ids >> d) for d in range(3)], axis=1)
+        side = self.box_side(level)
+        return ((cells + 0.5) * side).astype(np.float32)
+
+
+def build_structure(positions: np.ndarray, domain: float,
+                    depth: Optional[int] = None,
+                    target_occupancy: float = 4.0) -> OctreeStructure:
+    """Build the static octree layout for fixed neuron positions."""
+    positions = np.asarray(positions)
+    n = positions.shape[0]
+    if depth is None:
+        depth = max(1, int(np.ceil(np.log(max(n, 8) / target_occupancy)
+                                   / np.log(8.0))))
+    cells = np.clip((positions / domain * (2 ** depth)).astype(np.int64),
+                    0, 2 ** depth - 1)
+    codes = morton_encode(cells)
+    order = np.argsort(codes, kind='stable').astype(np.int32)
+    inv_order = np.empty_like(order)
+    inv_order[order] = np.arange(n, dtype=np.int32)
+    sorted_codes = codes[order]
+    num_leaves = 8 ** depth
+    leaf_start = np.searchsorted(sorted_codes, np.arange(num_leaves + 1),
+                                 side='left').astype(np.int32)
+    occupancy = np.diff(leaf_start)
+    return OctreeStructure(
+        depth=depth, domain=float(domain), n=n, codes=codes,
+        order=order, inv_order=inv_order,
+        leaf_of=codes.astype(np.int32), leaf_start=leaf_start,
+        max_leaf=int(occupancy.max()) if n else 0)
+
+
+# ---------------------------------------------------------------------------
+# Per-update dynamic data (jittable)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LevelData:
+    """Aggregates for one octree level (dense, 8^level boxes).
+
+    Exactly the paper's node payload (vacant counts + the two centroids, cf.
+    the 264-byte node) extended with the order-p expansion tensors.  The
+    expansions are formed about the *static geometric box centers* (`gc`), not
+    the mass centroids: that keeps the distributed branch exchange an exact
+    psum of partials (DESIGN.md §2, assumption 3) and matches the original
+    fast-Gauss-transform construction.
+    """
+    den_w: jnp.ndarray     # (B,)    total vacant dendrites
+    ax_w: jnp.ndarray      # (B,)    total vacant axons
+    den_c: jnp.ndarray     # (B, 3)  dendrite mass centroid (direct tier)
+    ax_c: jnp.ndarray      # (B, 3)  axon mass centroid (direct/hermite tiers)
+    gc: jnp.ndarray        # (B, 3)  static geometric centers (expansion origin)
+    herm: jnp.ndarray      # (B, k)  Hermite coeffs of dendrites about gc
+    moms: jnp.ndarray      # (B, k)  monomial moments of axons about gc
+
+    def tree_flatten(self):
+        return ((self.den_w, self.ax_w, self.den_c, self.ax_c, self.gc,
+                 self.herm, self.moms), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build_level(box_ids: jnp.ndarray, num_boxes: int, centers: jnp.ndarray,
+                positions: jnp.ndarray, ax_vac: jnp.ndarray,
+                den_vac: jnp.ndarray, delta: float,
+                p: int = DEFAULT_ORDER) -> LevelData:
+    """Aggregate one level by segment-sum over neurons.
+
+    box_ids: (n,) static int32 box id per neuron at this level.
+    centers: (num_boxes, 3) static geometric centers.
+    ax_vac/den_vac: (n,) float vacant element counts.
+
+    Every field is a plain (possibly weighted) segment-sum over neurons, so a
+    device holding a subset of neurons produces an exact partial that merges
+    by addition — the paper's branch-node exchange.
+    """
+    seg = lambda vals: jax.ops.segment_sum(vals, box_ids, num_segments=num_boxes)
+    den_w = seg(den_vac)
+    ax_w = seg(ax_vac)
+    den_pos = seg(den_vac[:, None] * positions)
+    ax_pos = seg(ax_vac[:, None] * positions)
+    den_c = den_pos / jnp.maximum(den_w, 1e-30)[:, None]
+    ax_c = ax_pos / jnp.maximum(ax_w, 1e-30)[:, None]
+
+    scaled = (positions - centers[box_ids]) / jnp.sqrt(delta)
+    feats = mi.monomials(scaled, p)                       # (n, k)
+    # A_alpha(B) = 1/alpha! sum_{j in B} den_j ((s_j - gc_B)/sqrt(delta))^alpha
+    herm = seg(den_vac[:, None] * feats)
+    herm = herm / jnp.asarray(mi.multi_factorial(p), herm.dtype)
+    # M_beta(B) = sum_{i in B} ax_i ((t_i - gc_B)/sqrt(delta))^beta
+    moms = seg(ax_vac[:, None] * feats)
+
+    return LevelData(den_w=den_w, ax_w=ax_w, den_c=den_c, ax_c=ax_c,
+                     gc=centers, herm=herm, moms=moms)
+
+
+def build_pyramid(structure: OctreeStructure, positions: jnp.ndarray,
+                  ax_vac: jnp.ndarray, den_vac: jnp.ndarray, delta: float,
+                  p: int = DEFAULT_ORDER) -> List[LevelData]:
+    """The upward pass: LevelData for levels 0..depth.
+
+    Levels are built independently by segment-sum (O(n * depth * k) work,
+    all dense matmul-friendly ops).  An M2M-merging upward pass is
+    asymptotically cheaper but needs per-level re-centering of child
+    expansions; both agree to truncation order (tested) — we keep the
+    segment-sum form because on TPU it is one fused gather+matmul per level.
+    """
+    levels = []
+    for l in range(structure.depth + 1):
+        ids = jnp.asarray(structure.box_of(l))
+        centers = jnp.asarray(structure.centers_at(l))
+        levels.append(build_level(ids, structure.boxes_at(l), centers,
+                                  positions, ax_vac, den_vac, delta, p))
+    return levels
+
+
+def build_pyramid_m2m(structure: OctreeStructure, positions: jnp.ndarray,
+                      ax_vac: jnp.ndarray, den_vac: jnp.ndarray, delta: float,
+                      p: int = DEFAULT_ORDER) -> List[LevelData]:
+    """The classic FMM upward pass: leaf level from points, parents by
+    merging children (Hermite M2M shift for the dendrite coefficients —
+    exact on the truncated series, which is lower-triangular in |alpha|;
+    binomial moment shift for the axon moments — exact).
+
+    O(n * k + #boxes * 8 * k^2) vs the segment-sum build's O(n * depth * k):
+    asymptotically cheaper for deep trees; both agree to truncation order
+    (tests/test_octree.py::test_m2m_pyramid_matches_segment_sum).
+    """
+    from repro.core import expansions as ex
+
+    depth = structure.depth
+    leaf_ids = jnp.asarray(structure.box_of(depth))
+    leaf_centers = jnp.asarray(structure.centers_at(depth))
+    levels = [None] * (depth + 1)
+    levels[depth] = build_level(leaf_ids, structure.boxes_at(depth),
+                                leaf_centers, positions, ax_vac, den_vac,
+                                delta, p)
+    k = p ** 3
+    for l in range(depth - 1, -1, -1):
+        child = levels[l + 1]
+        nb = structure.boxes_at(l)
+        pc = jnp.asarray(structure.centers_at(l))           # (nb, 3)
+        cc = child.gc.reshape(nb, 8, 3)
+        den_w = child.den_w.reshape(nb, 8).sum(-1)
+        ax_w = child.ax_w.reshape(nb, 8).sum(-1)
+        den_pos = (child.den_c * child.den_w[:, None]).reshape(nb, 8, 3).sum(1)
+        ax_pos = (child.ax_c * child.ax_w[:, None]).reshape(nb, 8, 3).sum(1)
+        den_c = den_pos / jnp.maximum(den_w, 1e-30)[:, None]
+        ax_c = ax_pos / jnp.maximum(ax_w, 1e-30)[:, None]
+
+        shift_h = jax.vmap(jax.vmap(
+            lambda a, c, pcen: ex.m2m(a, c, pcen, delta, p),
+            in_axes=(0, 0, None)), in_axes=(0, 0, 0))
+        herm = shift_h(child.herm.reshape(nb, 8, k), cc, pc).sum(axis=1)
+        shift_m = jax.vmap(jax.vmap(
+            lambda m, c, pcen: ex.moment_shift(m, c, pcen, delta, p),
+            in_axes=(0, 0, None)), in_axes=(0, 0, 0))
+        moms = shift_m(child.moms.reshape(nb, 8, k), cc, pc).sum(axis=1)
+
+        levels[l] = LevelData(den_w=den_w, ax_w=ax_w, den_c=den_c, ax_c=ax_c,
+                              gc=pc, herm=herm, moms=moms)
+    return levels

@@ -1,0 +1,227 @@
+"""Level-synchronous stochastic dual-tree descent (paper Algorithms 1 & 2).
+
+The paper processes (source-box, target-box) pairs with an explicit stack and
+per-pair recursion.  Key structural facts it proves/uses:
+
+* each *source child* chooses exactly ONE target child proportionally to
+  box<->box attraction (Alg. 1 l.18-21), so at any level the active pairs are
+  indexed by the source boxes of that level;
+* all vacant axons of a neuron follow the same descent (Sec. 5: "both axons
+  are always in the same box, so their choice will be the same");
+* `choose_target` picks the evaluation tier per child (Alg. 2):
+  direct if the boxes are small, Hermite if both sides are heavy
+  (dendrites > c1 AND axons > c2), Taylor if only the dendrite side is heavy.
+
+On TPU the stack becomes a breadth-first sweep: one dense, fully vectorized
+step per level mapping ``tgt[level] -> tgt[level+1]`` over all 8^{l+1} source
+boxes at once.  Branches become a branchless 3-way blend of log-masses
+(computing all tiers on dense slabs beats divergent control flow on a vector
+machine; the Taylor tier is chunked to bound the (boxes, 8, k, k) workspace).
+
+Sampling uses the Gumbel-max trick on log-masses — underflow-safe for far box
+pairs (sigma = 750 vs arbitrarily large domains) and bitwise reproducible via
+keys folded from (step, level).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import expansions as ex
+from repro.core import multi_index as mi
+from repro.core.multi_index import DEFAULT_ORDER
+from repro.core.octree import LevelData, OctreeStructure
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class FMMConfig:
+    """Knobs of the synapse-search algorithm (paper Table 1 + Alg. 2)."""
+    sigma: float = 750.0           # probability kernel scale (Table 1)
+    kernel_scale: str = "sigma_squared"  # Eq. 8: delta = sigma^2 ("sigma": Eq. 1)
+    p: int = DEFAULT_ORDER         # expansion terms per dim (paper: 4)
+    c1: float = 70.0               # dendrite-count threshold (Alg. 2)
+    c2: float = 70.0               # axon-count threshold (Alg. 2)
+    tier_mode: str = "paper"       # paper | direct | hermite | taylor
+    # Chunking bound for the Taylor tier.  With the separable M2L
+    # (expansions.box_mass_taylor_log) the workspace is tiny, so chunking is
+    # off by default; it remains available for the dense reference path.
+    taylor_chunk: int = 1 << 30
+    # FGT validity guard: expansions are only used on levels whose box side
+    # satisfies side <= size_guard * sqrt(delta) (truncation error and the
+    # Hermite-polynomial magnitudes are controlled by r = side/(2 sqrt(delta));
+    # the guard is resolved at trace time, so it costs nothing).  The paper's
+    # count thresholds implicitly correlate with level; this makes the
+    # criterion explicit and numerically safe for arbitrary domain sizes.
+    # Default 0.5 keeps r <= 0.26, which holds the truncation error of the
+    # p = 4 expansions under the paper's Fig. 5 bound (0.125%) — larger boxes
+    # fall back to the exact direct tier (benchmarks fig5 verifies).
+    size_guard: float = 0.5
+
+    @property
+    def delta(self) -> float:
+        return self.sigma ** 2 if self.kernel_scale == "sigma_squared" \
+            else self.sigma
+
+
+def _tier_log_masses(child_ax_w, child_ax_c, child_gc, child_moms,
+                     tgt_den_w, tgt_den_c, tgt_gc, tgt_herm,
+                     cfg: FMMConfig, expansions_valid: bool) -> jnp.ndarray:
+    """Blend the three evaluation tiers of Alg. 2 into one log-mass slab.
+
+    Shapes: child_* are (B, ...) for the B source boxes of the new level;
+    tgt_* are (B, 8, ...) for the 8 candidate target children of each.
+    Expansions are anchored at the static geometric centers `gc`.
+    Returns (B, 8) log attraction masses.
+    """
+    delta = cfg.delta
+    ax_w = child_ax_w[:, None]                                    # (B,1)
+    ax_c = child_ax_c[:, None, :]                                 # (B,1,3)
+
+    log_direct = ex.box_mass_direct_log(ax_w, ax_c, tgt_den_w, tgt_den_c,
+                                        delta)                    # (B,8)
+    if cfg.tier_mode == "direct" or not expansions_valid:
+        return log_direct
+
+    # Hermite tier: dendrite expansion (about tgt_gc) evaluated at the axon
+    # mass centroid, weighted by the axon count.
+    log_hermite = ex.box_mass_hermite_log(ax_w, ax_c, tgt_herm, tgt_gc,
+                                          delta, cfg.p)           # (B,8)
+
+    def taylor_chunked():
+        def one_chunk(args):
+            moms, s_gc, herm, d_gc = args
+            return ex.box_mass_taylor_log(moms[:, None, :], s_gc[:, None, :],
+                                          herm, d_gc, delta, cfg.p)
+        b = child_moms.shape[0]
+        chunk = cfg.taylor_chunk
+        if b <= chunk:
+            return one_chunk((child_moms, child_gc, tgt_herm, tgt_gc))
+        pad = (-b) % chunk
+        padded = [jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+                  for x in (child_moms, child_gc, tgt_herm, tgt_gc)]
+        reshaped = [x.reshape(((b + pad) // chunk, chunk) + x.shape[1:])
+                    for x in padded]
+        out = jax.lax.map(one_chunk, tuple(reshaped))
+        return out.reshape(-1, 8)[:b]
+
+    if cfg.tier_mode == "hermite":
+        return log_hermite
+    if cfg.tier_mode == "taylor":
+        return taylor_chunked()
+
+    # tier_mode == "paper": the Alg. 2 decision tree, branchless.
+    log_taylor = taylor_chunked()
+    heavy_den = tgt_den_w > cfg.c1                                # (B,8)
+    heavy_ax = (child_ax_w > cfg.c2)[:, None]                     # (B,1)
+    out = jnp.where(heavy_den & heavy_ax, log_hermite,
+                    jnp.where(heavy_den, log_taylor, log_direct))
+    return out
+
+
+def descend(structure: OctreeStructure, levels: List[LevelData],
+            key: jax.Array, cfg: FMMConfig) -> jnp.ndarray:
+    """Run the full descent; returns (8^depth,) target leaf id per source
+    leaf box (-1 where the leaf holds no vacant axons)."""
+    depth = structure.depth
+    # Level 0: the root's (only) pair is (root, root) — Alg. 1 stack init.
+    tgt = jnp.zeros((1,), jnp.int32)
+    active = (levels[0].ax_w > 0) & (levels[0].den_w > 0)
+    tgt = jnp.where(active, tgt, -1)
+
+    for l in range(depth):
+        nxt = levels[l + 1]
+        b = structure.boxes_at(l + 1)
+        # Source-side work only on OCCUPIED boxes (static lists — neuron
+        # positions never move); results scattered back into the dense map.
+        occ = jnp.asarray(structure.occupied_at(l + 1), jnp.int32)  # (O,)
+        parent = occ >> 3
+        parent_tgt = tgt[parent]                                  # (O,)
+        # 8 candidate target children of the parent's target box.
+        tc = (jnp.maximum(parent_tgt, 0)[:, None] << 3) \
+            + jnp.arange(8, dtype=jnp.int32)[None, :]             # (O,8)
+
+        # FGT validity: expansions only where the box side is small vs the
+        # kernel scale (resolved at trace time — static per level).
+        valid = structure.box_side(l + 1) <= cfg.size_guard * math.sqrt(cfg.delta)
+        log_mass = _tier_log_masses(
+            nxt.ax_w[occ], nxt.ax_c[occ], nxt.gc[occ], nxt.moms[occ],
+            nxt.den_w[tc], nxt.den_c[tc], nxt.gc[tc], nxt.herm[tc],
+            cfg, valid)
+
+        log_mass = jnp.where(nxt.den_w[tc] > 0, log_mass, NEG_INF)
+        gumbel = jax.random.gumbel(jax.random.fold_in(key, l + 1),
+                                   (occ.shape[0], 8), log_mass.dtype)
+        choice = jnp.argmax(log_mass + gumbel, axis=-1).astype(jnp.int32)
+        new_tgt = (jnp.maximum(parent_tgt, 0) << 3) + choice
+
+        alive = (parent_tgt >= 0) & (nxt.ax_w[occ] > 0) \
+            & jnp.any(nxt.den_w[tc] > 0, axis=-1)
+        tgt = jnp.full((b,), -1, jnp.int32).at[occ].set(
+            jnp.where(alive, new_tgt, -1))
+    return tgt
+
+
+def resolve_leaf_partners(structure: OctreeStructure,
+                          positions: jnp.ndarray,
+                          ax_vac: jnp.ndarray, den_vac: jnp.ndarray,
+                          my_tgt: jnp.ndarray, key: jax.Array,
+                          cfg: FMMConfig) -> jnp.ndarray:
+    """Neuron-level resolution inside the chosen leaf boxes.
+
+    The paper's octree splits until leaves hold ONE neuron, so leaf-leaf pairs
+    immediately form synapses.  Our bucketed leaves instead finish with one
+    exact, direct-evaluation categorical draw over the target bucket — the
+    same distribution a deeper tree would induce, but with true positions
+    (strictly more faithful to Eq. 1 than box centroids).
+
+    my_tgt: (n,) chosen target LEAF box per neuron (-1 = no request).  The FMM
+    path passes the per-leaf descent result gathered to neurons (all neurons
+    of a leaf share the choice — the paper's reduced freedom of choice);
+    Barnes–Hut passes genuinely per-neuron choices.
+
+    Returns (n,) partner neuron id per neuron, -1 where no request is made.
+    """
+    n = structure.n
+    delta = cfg.delta
+    order = jnp.asarray(structure.order)
+    leaf_start = jnp.asarray(structure.leaf_start)
+    max_leaf = max(structure.max_leaf, 1)
+    safe_tgt = jnp.maximum(my_tgt, 0)
+    start = leaf_start[safe_tgt]                                 # (n,)
+    count = leaf_start[safe_tgt + 1] - start                     # (n,)
+    slot = jnp.arange(max_leaf, dtype=jnp.int32)[None, :]        # (1,K)
+    cand = order[jnp.minimum(start[:, None] + slot, n - 1)]      # (n,K)
+    valid = slot < count[:, None]                                # (n,K)
+
+    d2 = jnp.sum((positions[:, None, :] - positions[cand]) ** 2, axis=-1)
+    logw = jnp.log(jnp.maximum(den_vac[cand], ex._LOG_EPS)) - d2 / delta
+    mask = valid & (den_vac[cand] > 0) \
+        & (cand != jnp.arange(n, dtype=jnp.int32)[:, None])      # no autapses
+    logw = jnp.where(mask, logw, NEG_INF)
+
+    gumbel = jax.random.gumbel(jax.random.fold_in(key, 10_000),
+                               logw.shape, logw.dtype)
+    pick = jnp.argmax(logw + gumbel, axis=-1)
+    partner = jnp.take_along_axis(cand, pick[:, None], axis=-1)[:, 0]
+    any_ok = jnp.any(mask, axis=-1)
+    wants = (ax_vac >= 1.0) & (my_tgt >= 0) & any_ok
+    return jnp.where(wants, partner, -1).astype(jnp.int32)
+
+
+def find_partners(structure: OctreeStructure, levels: List[LevelData],
+                  positions: jnp.ndarray, ax_vac: jnp.ndarray,
+                  den_vac: jnp.ndarray, key: jax.Array,
+                  cfg: FMMConfig) -> jnp.ndarray:
+    """Alg. 1 `find_synapses` (choice phase): per-neuron partner requests."""
+    k1, k2 = jax.random.split(key)
+    tgt_leaf = descend(structure, levels, k1, cfg)
+    my_tgt = tgt_leaf[jnp.asarray(structure.leaf_of)]
+    return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
+                                 my_tgt, k2, cfg)

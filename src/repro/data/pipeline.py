@@ -1,0 +1,62 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, shard), so:
+  * restart-from-checkpoint resumes the exact stream (fault tolerance needs
+    no data-state checkpointing),
+  * each device generates only its local shard (no host->device transfer,
+    no cross-device traffic),
+  * elastic re-sharding reproduces identical global batches under a new
+    device count.
+
+Two sources: `random` tokens (uniform over the vocab, for substrate and
+dry-run work) and `lm` — a deterministic Zipf-ish Markov stream with
+learnable structure (quickstart/e2e training uses this so the loss visibly
+drops below the uniform entropy floor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    kind: str = "lm"               # lm | random
+    zipf_classes: int = 64         # markov state count for `lm`
+
+
+def _markov_batch(key, batch: int, seq: int, vocab: int, classes: int):
+    """A token stream with low-order structure: token ~ f(prev_class)."""
+    k1, k2 = jax.random.split(key)
+    # class transition: next class = class + noise (mod classes)
+    steps = jax.random.randint(k1, (batch, seq), -2, 3)
+    cls = jnp.cumsum(steps, axis=1) % classes
+    # token = class-dependent narrow band of the vocab
+    band = max(vocab // classes, 1)
+    offs = jax.random.randint(k2, (batch, seq), 0, band)
+    toks = (cls * band + offs) % vocab
+    return toks.astype(jnp.int32)
+
+
+def make_batch(cfg: ModelConfig, data: DataConfig, step: int,
+               batch: int, seq: int) -> Dict[str, jnp.ndarray]:
+    """Global batch for `step` (callers slice / shard as needed)."""
+    key = jax.random.fold_in(jax.random.key(data.seed), step)
+    if cfg.family == "audio":
+        feats = jax.random.normal(key, (batch, seq, cfg.frontend_dim),
+                                  jnp.float32)
+        labels = jax.random.randint(jax.random.fold_in(key, 1),
+                                    (batch, seq), 0, cfg.vocab_size)
+        return {"inputs": feats, "labels": labels.astype(jnp.int32)}
+    if data.kind == "random":
+        toks = jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab_size)
+    else:
+        toks = _markov_batch(key, batch, seq + 1, cfg.vocab_size,
+                             data.zipf_classes)
+    return {"inputs": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused MSP phase-1/2 neuron update.
+
+The 500 000-step outer loop applies, per neuron: membrane decay + input,
+spike draw, refractory bookkeeping, and the calcium trace.  Unfused, that is
+6+ HBM round-trips of (n,)-arrays per step; fused it is one read + one write
+per array — the step becomes bandwidth-minimal.  (XLA usually fuses these
+too; the kernel makes the schedule explicit, keeps the whole working set in
+VMEM, and is the anchor point for the multi-step in-VMEM variant noted in
+EXPERIMENTS.md §Perf.)
+
+All model constants are baked in as compile-time scalars (they never change
+within a run).  int32 refractory counters and a float spike mask keep every
+block a plain (BN,) vector op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BN = 2048
+
+
+def _kernel(x_ref, refrac_ref, ca_ref, syn_ref, u_ref,
+            x_out, refrac_out, spk_out, ca_out, *,
+            x0, tau_x, background, w_syn, beta_ca, tau_ca, refractory):
+    x = x_ref[...]
+    refrac = refrac_ref[...]
+    ca = ca_ref[...]
+
+    x_new = x + (x0 - x) * (1.0 / tau_x) + background + w_syn * syn_ref[...]
+    spiked = (u_ref[...] < x_new) & (refrac <= 0)
+    spk_f = spiked.astype(x.dtype)
+
+    x_out[...] = x_new
+    refrac_out[...] = jnp.where(spiked, refractory,
+                                jnp.maximum(refrac - 1, 0))
+    spk_out[...] = spk_f
+    ca_out[...] = ca * (1.0 - tau_ca) + beta_ca * spk_f
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "x0", "tau_x", "background", "w_syn", "beta_ca", "tau_ca", "refractory",
+    "bn", "interpret"))
+def msp_update(x, refrac, calcium, syn_input, uniform, *,
+               x0, tau_x, background, w_syn, beta_ca, tau_ca, refractory,
+               bn: int = DEFAULT_BN, interpret: bool = False):
+    """Fused neuron update.  All inputs (n,); returns (x', refrac', spiked_f32,
+    calcium')."""
+    n = x.shape[0]
+    npad = ((n + bn - 1) // bn) * bn
+    pad = lambda a: jnp.pad(a, (0, npad - n))
+    args = (pad(x), pad(refrac), pad(calcium), pad(syn_input), pad(uniform))
+
+    grid = (npad // bn,)
+    spec = pl.BlockSpec((bn,), lambda i: (i,))
+    outs = pl.pallas_call(
+        functools.partial(_kernel, x0=x0, tau_x=tau_x, background=background,
+                          w_syn=w_syn, beta_ca=beta_ca, tau_ca=tau_ca,
+                          refractory=refractory),
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), x.dtype),
+            jax.ShapeDtypeStruct((npad,), refrac.dtype),
+            jax.ShapeDtypeStruct((npad,), x.dtype),
+            jax.ShapeDtypeStruct((npad,), calcium.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:n] for o in outs)

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run natively; anywhere
+else (this CPU container, tests) they run through the interpreter only when
+explicitly requested, otherwise the pure-jnp reference executes — interpret
+mode runs the kernel body in Python per grid step, which is correct but slow,
+so it is reserved for validation.
+
+    use_pallas=None   -> auto: Pallas on TPU, reference elsewhere
+    use_pallas=True   -> force Pallas (interpret=True off-TPU)
+    use_pallas=False  -> force reference
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gaussian_nbody as _gk
+from repro.kernels import m2l_pair as _m2l
+from repro.kernels import msp_update as _msp
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _decide(use_pallas: Optional[bool]):
+    """-> (run_pallas, interpret)"""
+    if use_pallas is None:
+        return (_on_tpu(), False)
+    if use_pallas:
+        return (True, not _on_tpu())
+    return (False, False)
+
+
+def gaussian_nbody(targets, sources, weights, delta,
+                   use_pallas: Optional[bool] = None):
+    run, interp = _decide(use_pallas)
+    if run:
+        return _gk.gaussian_nbody(targets, sources, weights, delta,
+                                  interpret=interp)
+    return _ref.gaussian_nbody(targets, sources, weights, delta)
+
+
+def msp_update(x, refrac, calcium, syn_input, uniform, cfg,
+               use_pallas: Optional[bool] = None):
+    """cfg: repro.core.msp.MSPConfig."""
+    kw = dict(x0=cfg.x0, tau_x=cfg.tau_x, background=cfg.background,
+              w_syn=cfg.w_syn, beta_ca=cfg.beta_ca, tau_ca=cfg.tau_ca,
+              refractory=cfg.refractory)
+    run, interp = _decide(use_pallas)
+    if run:
+        x2, r2, s2, c2 = _msp.msp_update(x, refrac, calcium, syn_input,
+                                         uniform, interpret=interp, **kw)
+        return x2, r2, s2 > 0.5, c2
+    x2, r2, s2, c2 = _ref.msp_update(x, refrac, calcium, syn_input, uniform,
+                                     **kw)
+    return x2, r2, s2, c2
+
+
+def m2l_separable(moms, herm, y, p: int = 4,
+                  use_pallas: Optional[bool] = None):
+    run, interp = _decide(use_pallas)
+    if run:
+        return _m2l.m2l_separable(moms, herm, y, p=p, interpret=interp)
+    return _ref.m2l_separable(moms, herm, y, p=p)

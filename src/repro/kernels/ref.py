@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function here defines the exact semantics its kernel twin must
+reproduce; tests sweep shapes/dtypes and assert allclose between the two.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gaussian_nbody(targets: jnp.ndarray, sources: jnp.ndarray,
+                   weights: jnp.ndarray, delta: float) -> jnp.ndarray:
+    """u(t_i) = sum_j w_j exp(-||t_i - s_j||^2 / delta).
+
+    targets (N, 3) f32, sources (M, 3) f32, weights (M,) f32 -> (N,) f32.
+    """
+    d2 = jnp.sum((targets[:, None, :] - sources[None, :, :]) ** 2, axis=-1)
+    return jnp.exp(-d2 / delta) @ weights
+
+
+def msp_update(x, refrac, calcium, syn_input, uniform,
+               x0, tau_x, background, w_syn, beta_ca, tau_ca, refractory):
+    """Fused MSP phase-1 neuron update (msp.step_neurons without growth).
+
+    Returns (x', refrac', spiked, calcium').
+    """
+    x_new = x + (x0 - x) / tau_x + background + w_syn * syn_input
+    spiked = (uniform < x_new) & (refrac <= 0)
+    refrac_new = jnp.where(spiked, refractory, jnp.maximum(refrac - 1, 0))
+    ca_new = calcium * (1.0 - tau_ca) + beta_ca * spiked.astype(x.dtype)
+    return x_new, refrac_new, spiked, ca_new
+
+
+def m2l_separable(moms: jnp.ndarray, herm: jnp.ndarray, y: jnp.ndarray,
+                  p: int = 4) -> jnp.ndarray:
+    """Envelope-free separable M2L series (the Taylor-tier inner product).
+
+    moms (B, p^3), herm (B, p^3), y (B, 3) scaled offsets ->
+    series (B,) with  mass = exp(-||y||^2) * series.
+    """
+    from repro.core import multi_index as mi
+    import numpy as np
+    big_p = 2 * p - 1
+    hd = mi._per_dim_hermite_poly(y, big_p)               # (B, 3, 2p-1)
+    hank = np.arange(p)[:, None] + np.arange(p)[None, :]
+    g = hd[..., jnp.asarray(hank)]                        # (B, 3, p, p)
+    sign = jnp.asarray(mi.sign_table(p), g.dtype)
+    fact = jnp.asarray(mi.multi_factorial(p), g.dtype)
+    t = (moms / fact).reshape(moms.shape[:-1] + (p, p, p))
+    t = jnp.einsum('...ab,...bcd->...acd', g[..., 0, :, :], t)
+    t = jnp.einsum('...ab,...cbd->...cad', g[..., 1, :, :], t)
+    t = jnp.einsum('...ab,...cdb->...cda', g[..., 2, :, :], t)
+    asign = (herm * sign).reshape(herm.shape[:-1] + (p, p, p))
+    return jnp.sum(asign * t, axis=(-3, -2, -1))

@@ -1,0 +1,75 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ before any jax import (see dryrun.py).
+
+"""Dry-run of the PAPER'S OWN workload on the production meshes.
+
+Lowers + compiles one sharded simulation step of the distributed MSP-FMM
+engine (neurons sharded over the flattened device axis — the analogue of the
+paper's 64-rank MPI runs, at 256/512 'ranks') and records the same
+memory/cost/collective analysis as the LM dry-run.
+
+    PYTHONPATH=src python -m repro.launch.brain_dryrun [--n-per-rank 512]
+"""
+import argparse
+import json
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core.distributed import DistributedPlasticityEngine
+from repro.core.engine import EngineConfig
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.launch.dryrun import collective_census
+
+
+def run(n_per_rank: int, ranks: int) -> dict:
+    n = n_per_rank * ranks
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 2000.0, (n, 3)).astype(np.float32)
+    mesh = Mesh(np.array(jax.devices()[:ranks]).reshape(ranks), ("data",))
+    eng = DistributedPlasticityEngine(
+        pos, mesh, "data", MSPConfig.calibrated(),
+        FMMConfig(), EngineConfig(method="fmm", domain=2000.0))
+    step = eng.make_sharded_step()
+    state = jax.eval_shape(eng.init_state)
+    key = jax.ShapeDtypeStruct((), jax.numpy.uint32)  # placeholder
+
+    # lower with concrete key type
+    import jax.numpy as jnp
+    lowered = step.lower(state, jax.eval_shape(lambda: jax.random.key(0)))
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    census = collective_census(compiled.as_text(), body_trips=1)
+    return {
+        "ranks": ranks, "neurons": n, "octree_depth": eng.structure.depth,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "collectives": census,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-per-rank", type=int, default=512)
+    ap.add_argument("--out", default="brain_dryrun_results.json")
+    args = ap.parse_args()
+    out = {}
+    for ranks in (256, 512):
+        print(f"[brain dry-run] {ranks} ranks x {args.n_per_rank} neurons",
+              flush=True)
+        out[ranks] = run(args.n_per_rank, ranks)
+        print(f"  depth={out[ranks]['octree_depth']} "
+              f"coll_bytes={out[ranks]['collectives']['total_bytes']/1e6:.1f} MB "
+              f"temp={out[ranks]['temp_bytes_per_device']/1e6:.1f} MB/device",
+              flush=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Train / prefill / decode step factories with full sharding annotations.
+
+These are the functions the launcher jits, the dry-run lowers, and the
+roofline reads.  Shapes come from `input_specs`; shardings from
+`repro.sharding.rules`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+from repro.sharding import hints, rules
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+    step: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Abstract state/batch construction (ShapeDtypeStructs; no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    def build():
+        params = M.init_params(jax.random.key(0), cfg)
+        return TrainState(params=params, opt=adamw.init(params, opt_cfg),
+                          step=jnp.zeros((), jnp.int32))
+    return jax.eval_shape(build)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: M.make_cache(cfg, batch, max_seq))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"inputs": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.float32),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"inputs": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"inputs": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.float32)}
+        return {"inputs": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "cache_pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def use_dp_over_model(cfg: ModelConfig, mesh: Mesh, batch: int,
+                      hbm_budget_bytes: float = 10e9) -> bool:
+    """True when training should run pure-DP (model axis carries batch):
+    the full train state (bf16 params + f32 m/v/master = 14 B/param) fits
+    per-device at fsdp-only ZeRO sharding AND the global batch divides the
+    whole mesh.  Eliminates every per-layer tensor-parallel psum."""
+    total_dev = int(np.prod(list(mesh.shape.values())))
+    if batch % total_dev:
+        return False
+    params = abstract_params(cfg)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    fsdp = int(np.prod([mesh.shape[a] for a in rules.fsdp_axes(mesh)])) or 1
+    return n * 14.0 / fsdp <= hbm_budget_bytes
+
+
+def state_shardings(mesh: Mesh, cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                    dp_over_model: bool = False):
+    st = abstract_train_state(cfg, opt_cfg)
+    spec_fn = rules.param_spec_dp if dp_over_model else rules.param_spec
+    return rules.tree_shardings(mesh, st, spec_fn)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, serve: bool = False,
+                    hbm_budget_bytes: float = 10e9):
+    """Training: ZeRO/FSDP specs.  Serving (serve=True): tensor-parallel-only
+    specs when the replicated-over-fsdp weights fit `hbm_budget_bytes` per
+    device; otherwise the training specs are kept (llama4-400b)."""
+    params = abstract_params(cfg)
+    if serve:
+        total = sum(int(np.prod(l.shape)) * 2 for l in jax.tree.leaves(params))
+        model = mesh.shape.get("model", 1)
+        if total / model <= hbm_budget_bytes:
+            return rules.tree_shardings(mesh, params, rules.param_spec_serve)
+    return rules.tree_shardings(mesh, params, rules.param_spec)
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, batch: int, max_seq: int):
+    ct = abstract_caches(cfg, batch, max_seq)
+    return rules.tree_shardings(mesh, ct, rules.cache_spec)
+
+
+def logits_shardings(mesh: Mesh, cfg: ModelConfig, batch: int):
+    """(B, 1, V) decode logits: batch@fsdp, vocab@model (never replicate)."""
+    b_axes = rules.batch_spec(mesh, batch)[0]   # str | tuple | None
+    spec = rules._spec(mesh, (batch, 1, cfg.vocab_size),
+                       (b_axes, None, "model"))
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(mesh: Mesh, specs: Dict[str, Any]):
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = NamedSharding(mesh, rules.data_spec(mesh, v.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                    remat: bool = True, mesh: Optional[Mesh] = None,
+                    dp_over_model: bool = False):
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        hints.set_mesh(mesh, dp_over_model)  # trace-time activation anchors
+        def loss(p):
+            return M.loss_fn(p, batch["inputs"], batch["labels"], cfg,
+                             remat=remat)
+        loss_val, grads = jax.value_and_grad(loss)(state.params)
+        params, opt = adamw.update(grads, state.opt, state.params, opt_cfg)
+        metrics = {"loss": loss_val,
+                   "grad_norm": adamw.global_norm(grads),
+                   "lr": adamw.schedule(opt_cfg, opt.count)}
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    if cfg.is_encoder:
+        # Encoder-only archs have no decode, hence no cache: "prefill" is the
+        # full bidirectional forward (the serving operation for hubert).
+        def encode_step(params, batch):
+            hints.set_mesh(mesh)
+            return M.forward_train(params, batch["inputs"], cfg)
+        return encode_step
+
+    def prefill_step(params, caches, batch):
+        hints.set_mesh(mesh)
+        logits, caches = M.forward_prefill(params, batch["inputs"], cfg,
+                                           caches)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    def serve_step(params, caches, batch):
+        hints.set_mesh(mesh)
+        logits, caches = M.forward_decode(params, batch["token"], cfg,
+                                          caches, batch["cache_pos"])
+        return logits, caches
+    return serve_step

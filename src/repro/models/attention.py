@@ -1,0 +1,405 @@
+"""Attention: GQA (with qk-norm / qkv-bias variants) and MLA (DeepSeek).
+
+Three entry modes share one code path:
+  * train/prefill: full-sequence chunked-flash attention (pure JAX streaming
+    softmax — O(chunk^2) live scores instead of O(S^2), which is what makes
+    the 32k-prefill cells memory-feasible without a custom kernel);
+  * decode: one query position against a (B, S, ...) KV cache;
+  * MLA decode uses the *absorbed* form (q projected into the compressed
+    kv-lora space, attention performed against the cached c-vectors) — the
+    cache stays (B, S, r + rope_dim) instead of (B, S, 2*H*hd).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure JAX)
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_core(q, k, v, causal: bool, q_offset: int,
+                    q_chunk: int, kv_chunk: int):
+    """Streaming-softmax forward.  Returns (o (B,T,H,Dv), lse (B,KV,G,T))."""
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    g = h // kv
+    scale = d ** -0.5
+
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    nq, nkv = t // q_chunk, s // kv_chunk
+    assert t % q_chunk == 0 and s % kv_chunk == 0, (t, s, q_chunk, kv_chunk)
+
+    qr = q.reshape(b, nq, q_chunk, kv, g, d)
+    kr = k.reshape(b, nkv, kv_chunk, kv, d)
+    vr = v.reshape(b, nkv, kv_chunk, kv, dv)
+
+    def q_block(carry, qi):
+        qb = qr[:, qi]                                   # (B, qc, KV, G, D)
+        q_pos = q_offset + qi * q_chunk \
+            + jnp.arange(q_chunk, dtype=jnp.int32)       # (qc,)
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            kb = kr[:, ki]                               # (B, kc, KV, D)
+            vb = vr[:, ki]
+            sc = jnp.einsum('bqkgd,bskd->bkgqs', qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+            if causal:
+                k_pos = ki * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                sc = jnp.where(mask[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum('bkgqs,bskd->bkgqd', p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        init = (jnp.full((b, kv, g, q_chunk), -1e30, jnp.float32),
+                jnp.zeros((b, kv, g, q_chunk), jnp.float32),
+                jnp.zeros((b, kv, g, q_chunk, dv), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(kv_block, init,
+                                    jnp.arange(nkv, dtype=jnp.int32))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))         # (B,KV,G,qc)
+        # (B, KV, G, qc, Dv) -> (B, qc, KV*G, Dv)
+        return carry, (o.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, dv),
+                       lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_block, None,
+                                     jnp.arange(nq, dtype=jnp.int32))
+    o = blocks.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dv).astype(q.dtype)
+    # lses: (nq, B, KV, G, qc) -> (B, KV, G, T)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kv, g, t)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool, q_offset: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024) -> jnp.ndarray:
+    """q: (B,T,H,D), k/v: (B,S,KV,Dv), H % KV == 0 -> (B,T,H,Dv).
+
+    Memory-lean attention with a flash-2-style custom VJP: the backward
+    recomputes probability blocks from (q, k, v, lse) instead of saving them,
+    so training residuals are O(B*T*H) rather than O(B*H*T*S).  (Perf log:
+    this took qwen2-0.5b/train_4k from 521 GB to single-digit GB of per-device
+    temps — EXPERIMENTS.md §Perf, LM-iteration 1.)
+    """
+    o, _ = _flash_fwd_core(q, k, v, causal, q_offset, q_chunk, kv_chunk)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, q_offset, q_chunk, kv_chunk):
+    o, lse = _flash_fwd_core(q, k, v, causal, q_offset, q_chunk, kv_chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, q_offset, q_chunk, kv_chunk, res, do):
+    q, k, v, o, lse = res
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    scale = d ** -0.5
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    nq, nkv = t // q_chunk, s // kv_chunk
+
+    qr = q.reshape(b, nq, q_chunk, kv, g, d)
+    kr = k.reshape(b, nkv, kv_chunk, kv, d)
+    vr = v.reshape(b, nkv, kv_chunk, kv, dv)
+    dor = do.reshape(b, nq, q_chunk, kv, g, dv)
+    lser = lse.reshape(b, kv, g, nq, q_chunk)
+    # D_i = rowsum(do * o): (B, KV, G, nq, qc)
+    dsum = jnp.einsum('bthd,bthd->bht', do.astype(jnp.float32),
+                      o.astype(jnp.float32))
+    dsum = dsum.reshape(b, kv, g, nq, q_chunk)
+
+    def kv_block(dq_acc, ki):
+        kb = kr[:, ki]
+        vb = vr[:, ki]
+        k_pos = ki * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+
+        def q_block(acc, qi):
+            dk_j, dv_j, dq_acc = acc
+            qb = qr[:, qi]
+            dob = dor[:, qi]
+            lse_i = lser[:, :, :, qi]                    # (B,KV,G,qc)
+            dsum_i = dsum[:, :, :, qi]
+            sc = jnp.einsum('bqkgd,bskd->bkgqs', qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+            if causal:
+                q_pos = q_offset + qi * q_chunk \
+                    + jnp.arange(q_chunk, dtype=jnp.int32)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                sc = jnp.where(mask[None, None, None], sc, -1e30)
+            p = jnp.exp(sc - lse_i[..., None])           # (B,KV,G,qc,kc)
+            dv_j = dv_j + jnp.einsum('bkgqs,bqkgd->bskd', p,
+                                     dob.astype(jnp.float32))
+            dp = jnp.einsum('bqkgd,bskd->bkgqs', dob.astype(jnp.float32),
+                            vb.astype(jnp.float32))
+            ds = p * (dp - dsum_i[..., None]) * scale
+            dk_j = dk_j + jnp.einsum('bkgqs,bqkgd->bskd', ds,
+                                     qb.astype(jnp.float32))
+            dq_i = jnp.einsum('bkgqs,bskd->bqkgd', ds,
+                              kb.astype(jnp.float32))
+            dq_acc = jax.lax.dynamic_update_index_in_dim(
+                dq_acc, dq_acc[:, qi] + dq_i, qi, 1)
+            return (dk_j, dv_j, dq_acc), None
+
+        init = (jnp.zeros((b, kv_chunk, kv, d), jnp.float32),
+                jnp.zeros((b, kv_chunk, kv, dv), jnp.float32),
+                dq_acc)
+        (dk_j, dv_j, dq_acc), _ = jax.lax.scan(
+            q_block, init, jnp.arange(nq, dtype=jnp.int32))
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, nq, q_chunk, kv, g, d), jnp.float32)
+    dq, (dk, dv_) = jax.lax.scan(kv_block, dq0,
+                                 jnp.arange(nkv, dtype=jnp.int32))
+    dq = dq.reshape(b, t, h, d).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(b, s, kv, d).astype(k.dtype)
+    dv_ = dv_.transpose(1, 0, 2, 3, 4).reshape(b, s, kv, dv).astype(v.dtype)
+    return dq, dk, dv_
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_pos: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """q: (B, 1, H, D), caches: (B, S, KV, D); attend over positions
+    <= cache_pos (inclusive — the new token was already written)."""
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qr = q.reshape(b, kv, g, d)
+    sc = jnp.einsum('bkgd,bskd->bkgs', qr, k_cache,
+                    preferred_element_type=jnp.float32) * d ** -0.5
+    pos = jnp.arange(s, dtype=jnp.int32)
+    sc = jnp.where((pos <= cache_pos)[None, None, None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum('bkgs,bskd->bkgd', w.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig) -> Params:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.he_init(ks[0], (cfg.d_model, cfg.num_heads * hd)),
+        "wk": L.he_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd)),
+        "wv": L.he_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd)),
+        "wo": L.he_init(ks[3], (cfg.num_heads * hd, cfg.d_model),
+                        fan_in=cfg.num_heads * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), L.PARAM_DTYPE)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), L.PARAM_DTYPE)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), L.PARAM_DTYPE)
+    if cfg.qk_norm:
+        p["q_norm"] = L.rms_norm_init(hd)
+        p["k_norm"] = L.rms_norm_init(hd)
+    return p
+
+
+def gqa_make_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    hd = cfg.resolved_head_dim
+    shp = (batch, max_seq, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shp, L.ACT_DTYPE), "v": jnp.zeros(shp, L.ACT_DTYPE)}
+
+
+def _project_qkv(p: Params, x, cfg: ModelConfig, positions):
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.num_heads, hd)
+    k = k.reshape(b, t, cfg.num_kv_heads, hd)
+    v = v.reshape(b, t, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              cache: Optional[Params] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Train (cache=None), prefill (cache given, x full-seq, cache_pos=None),
+    decode (cache given, x is (B,1,d), cache_pos scalar position)."""
+    b, t, _ = x.shape
+    decode = cache is not None and cache_pos is not None
+
+    if decode:
+        positions = jnp.full((b, 1), cache_pos, jnp.int32)
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1),
+        }
+        o = decode_attention(q, cache["k"], cache["v"], cache_pos)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        if cache is not None:   # prefill: write the whole prefix
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+            }
+        o = flash_attention(q, k, v, cfg.causal)
+
+    out = o.reshape(b, t, -1) @ p["wo"].astype(x.dtype)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed-KV attention
+# ---------------------------------------------------------------------------
+
+MLA_QK_NOPE = 128
+MLA_V_DIM = 128
+
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    h, r, rd = cfg.num_heads, cfg.kv_lora_rank, cfg.rope_head_dim
+    return {
+        "wq": L.he_init(ks[0], (cfg.d_model, h * (MLA_QK_NOPE + rd))),
+        "w_dkv": L.he_init(ks[1], (cfg.d_model, r)),
+        "w_kr": L.he_init(ks[2], (cfg.d_model, rd)),
+        "w_uk": L.he_init(ks[3], (r, h, MLA_QK_NOPE), fan_in=r),
+        "w_uv": L.he_init(ks[4], (r, h, MLA_V_DIM), fan_in=r),
+        "wo": L.he_init(ks[5], (h * MLA_V_DIM, cfg.d_model),
+                        fan_in=h * MLA_V_DIM),
+        "c_norm": L.rms_norm_init(r),
+    }
+
+
+def mla_make_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    return {
+        "c": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), L.ACT_DTYPE),
+        "kr": jnp.zeros((batch, max_seq, cfg.rope_head_dim), L.ACT_DTYPE),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    b, t, _ = x.shape
+    h, rd = cfg.num_heads, cfg.rope_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, t, h, MLA_QK_NOPE + rd)
+    q_nope, q_rope = q[..., :MLA_QK_NOPE], q[..., MLA_QK_NOPE:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              cache: Optional[Params] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, t, _ = x.shape
+    h, rd = cfg.num_heads, cfg.rope_head_dim
+    decode = cache is not None and cache_pos is not None
+    scale = (MLA_QK_NOPE + rd) ** -0.5
+
+    if decode:
+        positions = jnp.full((b, 1), cache_pos, jnp.int32)
+        q_nope, q_rope = _mla_q(p, x, cfg, positions)
+        c = L.rms_norm(p["c_norm"], x @ p["w_dkv"].astype(x.dtype),
+                       cfg.norm_eps)                      # (B,1,r)
+        kr = L.apply_rope((x @ p["w_kr"].astype(x.dtype))[:, :, None, :],
+                          positions, cfg.rope_theta)[:, :, 0, :]
+        cache = {
+            "c": jax.lax.dynamic_update_slice_in_dim(
+                cache["c"], c.astype(cache["c"].dtype), cache_pos, axis=1),
+            "kr": jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), cache_pos, axis=1),
+        }
+        # Absorbed decode: q~ = q_nope @ w_uk  lives in the c-space.
+        q_c = jnp.einsum('bohn,rhn->bohr', q_nope.astype(jnp.float32),
+                         p["w_uk"].astype(jnp.float32))   # (B,1,H,r)
+        sc = (jnp.einsum('bohr,bsr->bhs', q_c,
+                         cache["c"].astype(jnp.float32))
+              + jnp.einsum('bohd,bsd->bhs', q_rope.astype(jnp.float32),
+                           cache["kr"].astype(jnp.float32)))
+        sc = sc * scale
+        pos = jnp.arange(cache["c"].shape[1], dtype=jnp.int32)
+        sc = jnp.where((pos <= cache_pos)[None, None], sc, -1e30)
+        w = jax.nn.softmax(sc, axis=-1)
+        o_c = jnp.einsum('bhs,bsr->bhr', w, cache["c"].astype(jnp.float32))
+        o = jnp.einsum('bhr,rhv->bhv', o_c, p["w_uv"].astype(jnp.float32))
+        o = o.reshape(b, 1, h * MLA_V_DIM).astype(x.dtype)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        q_nope, q_rope = _mla_q(p, x, cfg, positions)
+        c = L.rms_norm(p["c_norm"], x @ p["w_dkv"].astype(x.dtype),
+                       cfg.norm_eps)                      # (B,T,r)
+        kr = L.apply_rope((x @ p["w_kr"].astype(x.dtype))[:, :, None, :],
+                          positions, cfg.rope_theta)      # (B,T,1,rd)
+        if cache is not None:
+            cache = {
+                "c": jax.lax.dynamic_update_slice_in_dim(
+                    cache["c"], c.astype(cache["c"].dtype), 0, axis=1),
+                "kr": jax.lax.dynamic_update_slice_in_dim(
+                    cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype),
+                    0, axis=1),
+            }
+        k_nope = jnp.einsum('btr,rhn->bthn', c, p["w_uk"].astype(c.dtype))
+        v = jnp.einsum('btr,rhv->bthv', c, p["w_uv"].astype(c.dtype))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr, (b, t, h, rd)).astype(k_nope.dtype)],
+            axis=-1)
+        o = flash_attention(q, k, v, cfg.causal)
+        o = o.reshape(b, t, h * MLA_V_DIM)
+
+    out = o @ p["wo"].astype(x.dtype)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    return mla_init(key, cfg) if cfg.use_mla else gqa_init(key, cfg)
+
+
+def attention_apply(p, x, cfg, cache=None, cache_pos=None):
+    fn = mla_apply if cfg.use_mla else gqa_apply
+    return fn(p, x, cfg, cache, cache_pos)
+
+
+def attention_make_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    return (mla_make_cache if cfg.use_mla else gqa_make_cache)(cfg, batch,
+                                                               max_seq)

@@ -1,0 +1,89 @@
+"""Primitive layers: norms, embeddings, rotary position embeddings, linear.
+
+Parameters are plain nested dicts of jnp arrays; every layer is a pair of
+``init(key, ...) -> params`` and a pure apply function.  bf16 activations /
+params with f32 norms-and-softmax is the default compute dtype policy
+(MaxText-style); the policy lives here so models stay dtype-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+
+
+def he_init(key, shape, fan_in=None, dtype=PARAM_DTYPE):
+    fan_in = fan_in or shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# -- RMSNorm ----------------------------------------------------------------
+
+def rms_norm_init(d: int):
+    return {"scale": jnp.ones((d,), PARAM_DTYPE)}
+
+
+def rms_norm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- Embedding ----------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int):
+    return {"table": he_init(key, (vocab, d), fan_in=d)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens].astype(ACT_DTYPE)
+
+
+def unembed(params, x):
+    # f32 logits for a stable softmax/cross-entropy.
+    return jnp.einsum('...d,vd->...v', x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))
+
+
+# -- Linear -------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False):
+    p = {"w": he_init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), PARAM_DTYPE)
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# -- Rotary position embeddings ----------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                 # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

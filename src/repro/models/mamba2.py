@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + single-step decode.
+
+Implements the SSD recurrence per head (state (N, P), head dim P):
+
+    h_t = a_t * h_{t-1} + dt_t * B_t (x)  (outer product B_t x_t^T)
+    y_t = C_t . h_t + D * x_t,            a_t = exp(dt_t * A),  A < 0
+
+* Training/prefill uses the chunked algorithm of the Mamba2 paper: an
+  intra-chunk attention-like quadratic term (Q x Q per chunk) plus an
+  inter-chunk state scan — O(T Q) work, O(T/Q) sequential steps, which is the
+  sub-quadratic property that makes the `long_500k` cell feasible.
+* Decode carries (conv_state (w-1 taps), ssm_state (H, N, P)) — O(1) per
+  token, no KV cache: this is why the SSM/hybrid archs own the 500k-decode
+  assignment cell.
+* Single B/C group (g = 1), matching mamba2-1.3b and zamba2's usage.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    d_inner, nheads, _, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.he_init(ks[0], (cfg.d_model,
+                                     2 * d_inner + 2 * n + nheads)),
+        "conv_w": L.he_init(ks[1], (cfg.ssm_conv, conv_dim),
+                            fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), L.PARAM_DTYPE),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": L.rms_norm_init(d_inner),
+        "out_proj": L.he_init(ks[2], (d_inner, cfg.d_model), fan_in=d_inner),
+    }
+
+
+def mamba2_make_cache(cfg: ModelConfig, batch: int) -> Params:
+    d_inner, nheads, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), L.ACT_DTYPE),
+        "ssm": jnp.zeros((batch, nheads, n, p), jnp.float32),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_inner, nheads, _, n = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv along time.  xbc: (B, T, C), w: (W, C)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)             # (B, T+W-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+              for i in range(width))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def _ssd_chunked(x, dt, a_log, bmat, cmat, d_skip, chunk: int):
+    """x: (B,T,H,P), dt: (B,T,H) (softplus applied), bmat/cmat: (B,T,N).
+
+    Returns y: (B,T,H,P) and the final state (B,H,N,P).
+    """
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, t)
+    t_orig = t
+    if t % q:
+        # Zero padding is exact for the recurrence: dt = 0 gives decay
+        # exp(0*A) = 1 and input contribution 0; padded y is sliced off.
+        pad = q - t % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nc = t // q
+
+    a = -jnp.exp(a_log)                                   # (H,)
+    # log decay per step: (B, T, H)
+    la = dt * a[None, None, :]
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    lar = la.reshape(b, nc, q, h)
+    br = bmat.reshape(b, nc, q, n)
+    cr = cmat.reshape(b, nc, q, n)
+
+    lcum = jnp.cumsum(lar, axis=2)                        # (B,NC,Q,H)
+    ltot = lcum[:, :, -1:, :]                             # (B,NC,1,H)
+
+    # --- intra-chunk (attention-like, causal) ---
+    # L[t,s] = exp(lcum_t - lcum_s) for s <= t
+    diff = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]   # (B,NC,Q,Q,H)
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum('bcqn,bcsn->bcqs', cr, br)               # (B,NC,Q,Q)
+    w_ = cb[..., None] * lmat                                # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum('bcqsh,bcsh,bcshp->bcqhp', w_, dtr,
+                         xr.astype(jnp.float32))
+
+    # --- chunk summary states ---
+    decay_to_end = jnp.exp(ltot - lcum)                      # (B,NC,Q,H)
+    s_chunk = jnp.einsum('bcqn,bcqh,bcqh,bcqhp->bchnp',
+                         br, dtr, decay_to_end, xr.astype(jnp.float32))
+
+    # --- inter-chunk scan ---
+    chunk_decay = jnp.exp(ltot[:, :, 0, :])                  # (B,NC,H)
+
+    def scan_fn(hstate, inp):
+        dec, s_c = inp                                       # (B,H), (B,H,N,P)
+        y_state = hstate                                     # state BEFORE chunk
+        hstate = hstate * dec[:, :, None, None] + s_c
+        return hstate, y_state
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum('bcqn,bcqh,bchnp->bcqhp',
+                         cr, jnp.exp(lcum), h_prev)
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :t_orig].astype(x.dtype), final
+
+
+def mamba2_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                 cache: Optional[Params] = None,
+                 cache_pos: Optional[jnp.ndarray] = None,
+                 ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, T, d).  Decode when cache is given and T == 1."""
+    bsz, t, _ = x.shape
+    d_inner, nheads, p, n = _dims(cfg)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                 # (B,T,H)
+
+    decode = cache is not None and t == 1
+    if decode:
+        new_conv = jnp.concatenate([cache["conv"], xbc], axis=1)[:, 1:, :]
+        xbc_c = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                             state=cache["conv"])
+        xs, bmat, cmat = jnp.split(xbc_c, [d_inner, d_inner + n], axis=-1)
+        xh = xs.reshape(bsz, nheads, p)                       # (B,H,P)
+        a = -jnp.exp(params["a_log"])                         # (H,)
+        dec = jnp.exp(dt[:, 0, :] * a[None, :])               # (B,H)
+        h = cache["ssm"] * dec[:, :, None, None] \
+            + jnp.einsum('bn,bh,bhp->bhnp', bmat[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh.astype(jnp.float32))
+        y = jnp.einsum('bn,bhnp->bhp', cmat[:, 0].astype(jnp.float32), h)
+        y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+        cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h}
+    else:
+        xbc_c = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xs, bmat, cmat = jnp.split(xbc_c, [d_inner, d_inner + n], axis=-1)
+        xh = xs.reshape(bsz, t, nheads, p)
+        y, final = _ssd_chunked(xh, dt, params["a_log"], bmat, cmat,
+                                params["d_skip"], cfg.ssm_chunk)
+        y = y.reshape(bsz, t, d_inner)
+        if cache is not None:   # prefill: leave conv taps + final state
+            cache = {"conv": xbc[:, -(cfg.ssm_conv - 1):, :].astype(
+                         cache["conv"].dtype),
+                     "ssm": final}
+
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, cache

@@ -1,0 +1,399 @@
+"""Model assembly: config -> init / train / prefill / decode.
+
+Layer stacks are scanned (`jax.lax.scan` over stacked per-layer params): the
+HLO stays O(1) in depth — required to compile 48-layer/400B-parameter graphs
+with 512 host devices in reasonable time — and XLA unrolls nothing.
+
+Family wiring
+-------------
+dense / vlm / audio : [attn + SwiGLU] x L
+moe                 : `moe_layer_step`-sized super-layers, last sub-layer MoE
+                      (llama4: step 2 -> dense,MoE pairs; deepseek: step 1 with
+                      `first_dense_layers` dense prefix)
+ssm                 : [mamba2] x L
+hybrid (zamba2)     : [mamba2] x L with ONE shared attention+MLP block applied
+                      every `shared_attn_every` layers (weights shared across
+                      sites, per-site KV cache)
+audio (hubert)      : encoder (bidirectional), input = precomputed frame
+                      embeddings (frontend stub), no decode path
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as E
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init/apply
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: ModelConfig, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.rms_norm_init(cfg.d_model),
+            "attn": A.attention_init(k1, cfg),
+            "ln2": L.rms_norm_init(cfg.d_model),
+            "mlp": E.swiglu_init(k2, cfg.d_model, d_ff)}
+
+
+def _dense_layer_apply(p, x, cfg, cache=None, cache_pos=None):
+    from repro.sharding import hints
+    x = hints.hint_batch(x)
+    h, cache = A.attention_apply(p["attn"], L.rms_norm(p["ln1"], x,
+                                                       cfg.norm_eps),
+                                 cfg, cache, cache_pos)
+    x = x + h
+    x = x + E.swiglu(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+    return x, cache
+
+
+def _moe_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.rms_norm_init(cfg.d_model),
+            "attn": A.attention_init(k1, cfg),
+            "ln2": L.rms_norm_init(cfg.d_model),
+            "moe": E.moe_init(k2, cfg)}
+
+
+def _moe_layer_apply(p, x, cfg, cache=None, cache_pos=None):
+    from repro.sharding import hints
+    x = hints.hint_batch(x)
+    h, cache = A.attention_apply(p["attn"], L.rms_norm(p["ln1"], x,
+                                                       cfg.norm_eps),
+                                 cfg, cache, cache_pos)
+    x = x + h
+    x = x + E.moe_apply(p["moe"], L.rms_norm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x, cache
+
+
+def _mamba_layer_init(key, cfg: ModelConfig) -> Params:
+    return {"ln": L.rms_norm_init(cfg.d_model),
+            "mixer": M.mamba2_init(key, cfg)}
+
+
+def _mamba_layer_apply(p, x, cfg, cache=None, cache_pos=None):
+    from repro.sharding import hints
+    x = hints.hint_batch(x)
+    h, cache = M.mamba2_apply(p["mixer"], L.rms_norm(p["ln"], x, cfg.norm_eps),
+                              cfg, cache, cache_pos)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _stacked_init(layer_init, key, n: int):
+    return jax.vmap(layer_init)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    params: Params = {"final_norm": L.rms_norm_init(cfg.d_model)}
+
+    if cfg.family == "audio":
+        params["frontend"] = L.linear_init(keys[0], cfg.frontend_dim,
+                                           cfg.d_model)
+    else:
+        params["embed"] = L.embedding_init(keys[0], cfg.vocab_size,
+                                           cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = L.linear_init(keys[1], cfg.d_model, cfg.vocab_size)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        params["layers"] = _stacked_init(
+            lambda k: _dense_layer_init(k, cfg, cfg.d_ff), keys[2],
+            cfg.num_layers)
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_prefix"] = _stacked_init(
+                lambda k: _dense_layer_init(k, cfg, cfg.d_ff), keys[3], nd)
+        rest = cfg.num_layers - nd
+        step = cfg.moe_layer_step
+        assert rest % step == 0, (rest, step)
+        n_super = rest // step
+        if step > 1:
+            params["dense_inter"] = _stacked_init(
+                lambda k: _dense_layer_init(k, cfg, cfg.d_ff), keys[4],
+                n_super * (step - 1))
+        params["layers"] = _stacked_init(
+            lambda k: _moe_layer_init(k, cfg), keys[5], n_super)
+    elif cfg.family == "ssm":
+        params["layers"] = _stacked_init(
+            lambda k: _mamba_layer_init(k, cfg), keys[2], cfg.num_layers)
+    elif cfg.family == "hybrid":
+        params["layers"] = _stacked_init(
+            lambda k: _mamba_layer_init(k, cfg), keys[2], cfg.num_layers)
+        params["shared_attn"] = _dense_layer_init(keys[3], cfg, cfg.d_ff)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    """Stacked decode caches, layout mirrors the layer stacks."""
+    def stack(fn, n):
+        one = fn()
+        return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), one)
+
+    if cfg.family in ("dense", "vlm"):
+        return {"layers": stack(lambda: A.attention_make_cache(
+            cfg, batch, max_seq), cfg.num_layers)}
+    if cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        step = cfg.moe_layer_step
+        n_super = (cfg.num_layers - nd) // step
+        out = {"layers": stack(lambda: A.attention_make_cache(
+            cfg, batch, max_seq), n_super)}
+        if nd:
+            out["dense_prefix"] = stack(lambda: A.attention_make_cache(
+                cfg, batch, max_seq), nd)
+        if step > 1:
+            out["dense_inter"] = stack(lambda: A.attention_make_cache(
+                cfg, batch, max_seq), n_super * (step - 1))
+        return out
+    if cfg.family == "ssm":
+        return {"layers": stack(lambda: M.mamba2_make_cache(cfg, batch),
+                                cfg.num_layers)}
+    if cfg.family == "hybrid":
+        n_sites = cfg.num_layers // cfg.shared_attn_every
+        return {"layers": stack(lambda: M.mamba2_make_cache(cfg, batch),
+                                cfg.num_layers),
+                "shared_attn": stack(lambda: A.attention_make_cache(
+                    cfg, batch, max_seq), n_sites)}
+    raise ValueError(cfg.family)
+
+
+def _scan_stack(apply_fn, stacked_params, x, cfg, caches=None,
+                cache_pos=None, remat=False):
+    """Scan `apply_fn` over stacked layer params (+ optional stacked caches)."""
+    if caches is None:
+        def body(h, lp):
+            h, _ = apply_fn(lp, h, cfg, None, None)
+            return h, None
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, stacked_params)
+        return x, None
+
+    def body(h, inp):
+        lp, cache = inp
+        h, cache = apply_fn(lp, h, cfg, cache, cache_pos)
+        return h, cache
+    x, caches = jax.lax.scan(body, x, (stacked_params, caches))
+    return x, caches
+
+
+def _hybrid_stack(params, x, cfg, caches=None, cache_pos=None,
+                  remat: bool = False):
+    """Mamba layers with the shared attention block every k layers.
+
+    The shared block's weights are scan-invariant (closure), its per-site KV
+    cache is scanned alongside the mamba caches.
+    """
+    k = cfg.shared_attn_every
+    n = cfg.num_layers
+    shared = params["shared_attn"]
+
+    site_of_layer = jnp.arange(n, dtype=jnp.int32) // k
+    is_site = (jnp.arange(n, dtype=jnp.int32) % k) == (k - 1)
+    n_sites = n // k
+
+    mcaches = caches["layers"] if caches is not None else None
+    acaches = caches["shared_attn"] if caches is not None else None
+
+    def body(carry, inp):
+        h, ac = carry
+        if caches is None:
+            lp, site, site_here = inp
+            mc = None
+        else:
+            (lp, mc), site, site_here = inp
+        h, mc = _mamba_layer_apply(lp, h, cfg, mc, cache_pos)
+
+        def with_attn(args):
+            h, ac = args
+            if ac is None:
+                h2, _ = _dense_layer_apply(shared, h, cfg, None, None)
+                return h2, ac
+            site_cache = jax.tree.map(lambda c: c[site], ac)
+            h2, site_cache = _dense_layer_apply(shared, h, cfg, site_cache,
+                                                cache_pos)
+            ac = jax.tree.map(
+                lambda c, sc: jax.lax.dynamic_update_index_in_dim(
+                    c, sc.astype(c.dtype), site, 0), ac, site_cache)
+            return h2, ac
+
+        h, ac = jax.lax.cond(site_here, with_attn, lambda a: a, (h, ac))
+        return (h, ac), mc
+
+    if remat and caches is None:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    xs_layers = params["layers"] if caches is None \
+        else (params["layers"], mcaches)
+    (x, acaches), mcaches = jax.lax.scan(
+        body, (x, acaches), (xs_layers, site_of_layer, is_site))
+    if caches is None:
+        return x, None
+    return x, {"layers": mcaches, "shared_attn": acaches}
+
+
+def backbone(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+             caches=None, cache_pos=None, remat: bool = False):
+    """Hidden-states trunk shared by train/prefill/decode.
+
+    remat=True checkpoints each scanned layer (training memory policy:
+    only layer boundaries saved, everything else recomputed in backward).
+    """
+    new_caches: Optional[Params] = {} if caches is not None else None
+
+    def run(name, apply_fn, stack_params):
+        nonlocal x, new_caches
+        c = caches.get(name) if caches is not None else None
+        x, c = _scan_stack(apply_fn, stack_params, x, cfg, c, cache_pos,
+                           remat=remat)
+        if new_caches is not None:
+            new_caches[name] = c
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        run("layers", _dense_layer_apply, params["layers"])
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            run("dense_prefix", _dense_layer_apply, params["dense_prefix"])
+        step = cfg.moe_layer_step
+        if step == 1:
+            run("layers", _moe_layer_apply, params["layers"])
+        else:
+            # super-layer: (step-1) dense layers then one MoE layer
+            n_super = params["layers"]["ln1"]["scale"].shape[0]
+            di = params["dense_inter"]
+            dcache = caches.get("dense_inter") if caches is not None else None
+            mcache = caches.get("layers") if caches is not None else None
+
+            def body(carry, inp):
+                h = carry
+                if caches is None:
+                    (dp, mp) = inp
+                    dc = mc = None
+                else:
+                    (dp, mp, dc, mc) = inp
+                for j in range(step - 1):
+                    dpj = jax.tree.map(lambda a: a[j], dp)
+                    dcj = jax.tree.map(lambda a: a[j], dc) if dc is not None \
+                        else None
+                    h, dcj = _dense_layer_apply(dpj, h, cfg, dcj, cache_pos)
+                    if dc is not None:
+                        dc = jax.tree.map(
+                            lambda c, s: jax.lax.dynamic_update_index_in_dim(
+                                c, s.astype(c.dtype), j, 0), dc, dcj)
+                h, mc = _moe_layer_apply(mp, h, cfg, mc, cache_pos)
+                return h, (dc, mc)
+
+            dres = jax.tree.map(
+                lambda a: a.reshape((n_super, step - 1) + a.shape[1:]), di)
+            if remat and caches is None:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            if caches is None:
+                x, _ = jax.lax.scan(body, x, (dres, params["layers"]))
+            else:
+                dcr = jax.tree.map(
+                    lambda a: a.reshape((n_super, step - 1) + a.shape[1:]),
+                    dcache)
+                x, (dcr, mcache) = jax.lax.scan(
+                    body, x, (dres, params["layers"], dcr, mcache))
+                new_caches["dense_inter"] = jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:]), dcr)
+                new_caches["layers"] = mcache
+    elif cfg.family == "ssm":
+        run("layers", _mamba_layer_apply, params["layers"])
+    elif cfg.family == "hybrid":
+        x, hc = _hybrid_stack(params, x, cfg, caches, cache_pos, remat=remat)
+        if new_caches is not None:
+            new_caches = hc
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches
+
+
+def _logits(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    from repro.sharding import hints
+    x = hints.hint_batch(x)
+    if cfg.tie_embeddings:
+        out = L.unembed(params["embed"], x)
+    else:
+        out = (x.astype(jnp.float32)
+               @ params["head"]["w"].astype(jnp.float32))
+    return hints.hint_logits(out)
+
+
+def embed_inputs(params: Params, inputs: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    from repro.sharding import hints
+    if cfg.family == "audio":
+        x = L.linear(params["frontend"], inputs.astype(L.ACT_DTYPE))
+    else:
+        x = L.embed(params["embed"], inputs)
+    # Anchor the canonical activation layout (batch@fsdp, rest replicated):
+    # without this the embedding gather's output inherits the table's layout
+    # (batch replicated) and poisons downstream propagation.
+    return hints.hint_batch(x)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, inputs: jnp.ndarray, cfg: ModelConfig,
+                  remat: bool = False) -> jnp.ndarray:
+    """-> f32 logits (B, S, V)."""
+    x = embed_inputs(params, inputs, cfg)
+    x, _ = backbone(params, x, cfg, remat=remat)
+    return _logits(params, x, cfg)
+
+
+def loss_fn(params: Params, inputs: jnp.ndarray, labels: jnp.ndarray,
+            cfg: ModelConfig, remat: bool = False) -> jnp.ndarray:
+    logits = forward_train(params, inputs, cfg, remat=remat)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # Gold-logit extraction via a masked reduction instead of
+    # take_along_axis: a gather over the model-sharded vocab dim forces an
+    # all-gather of the full (B,S,V) logits (40 GB/device at qwen2 scale);
+    # the iota-mask reduction partitions to a per-shard sum + psum of (B,S).
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None].astype(jnp.int32),
+                             logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def forward_prefill(params: Params, inputs: jnp.ndarray, cfg: ModelConfig,
+                    caches: Params) -> Tuple[jnp.ndarray, Params]:
+    """Fill the caches with the prompt; return last-position logits."""
+    x = embed_inputs(params, inputs, cfg)
+    x, caches = backbone(params, x, cfg, caches=caches, cache_pos=None)
+    return _logits(params, x[:, -1:, :], cfg), caches
+
+
+def forward_decode(params: Params, token: jnp.ndarray, cfg: ModelConfig,
+                   caches: Params, cache_pos: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step.  token: (B, 1) int32 (or (B,1,F) features)."""
+    x = embed_inputs(params, token, cfg)
+    x, caches = backbone(params, x, cfg, caches=caches, cache_pos=cache_pos)
+    return _logits(params, x, cfg), caches

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based sparse dispatch.
+
+Design notes
+------------
+* Dispatch is sort-based (megablocks-lite): token->expert assignments are
+  sorted by expert id, each expert takes its first `capacity` tokens, and
+  expert FFNs run as one batched einsum over the (E, C, d) buffer.  FLOPs are
+  therefore proportional to k * tokens (the *active* parameter count), not to
+  E * tokens — this is what makes the roofline numbers for the MoE archs
+  honest (a dense-dispatch einsum would overcount llama4-maverick by 64x).
+* Experts use SwiGLU, matching the assigned MoE archs (llama4 / deepseek).
+* Shared experts (deepseek: 2, llama4: 1) are a plain dense SwiGLU of width
+  n_shared * moe_d_ff applied to every token.
+* Router softmax and gate renormalisation run in f32.
+* Sharding: the expert dimension E maps to the mesh "model" axis (expert
+  parallelism); the (T, k) sort/scatter crosses the data<->model axes and XLA
+  SPMD materialises the all-to-all — visible and accounted in §Roofline.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def swiglu_init(key, d: int, f: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": L.he_init(k1, (d, f)),
+            "wg": L.he_init(k2, (d, f)),
+            "wo": L.he_init(k3, (f, d), fan_in=f)}
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.he_init(ks[0], (d, e), dtype=jnp.float32),
+        "wi": L.he_init(ks[1], (e, d, f)),
+        "wg": L.he_init(ks[2], (e, d, f)),
+        "wo": L.he_init(ks[3], (e, f, d), fan_in=f),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, f * cfg.num_shared_experts)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d).  Row-local sort-based dispatch.
+
+    Every routing step (sort, rank, scatter into the (E, C) buffer, combine)
+    happens *within one batch row*, so under pjit with batch@fsdp these are
+    collective-free; the ONLY cross-device movement is the (B, E, C, d)
+    dispatch buffer resharding batch@fsdp -> expert@model and back — one
+    bf16 all-to-all pair per layer, anchored by `hint_moe_buffer`.
+
+    (Perf log, EXPERIMENTS.md §Perf LM-cell-1: the previous global-sort
+    dispatch made XLA replicate full f32 (T*k, d) buffers through
+    collective-permutes inside the layer loop — 50 GB/layer at
+    deepseek-v2-lite/train_4k; row-local dispatch + anchors cut the step's
+    in-loop collective bytes ~12x.)
+    """
+    from repro.sharding import hints
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = _capacity(s, cfg)                                    # per row
+    x = hints.hint_batch(x)
+
+    logits = (x.astype(jnp.float32) @ p["router"])             # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                     # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- gather-only dispatch ------------------------------------------------
+    # Rank of each assignment within its expert (sort-free): cumulative count
+    # of one-hots over the flattened (S*k) assignment order.
+    sk = s * k
+    flat_e = expert.reshape(b, sk).astype(jnp.int32)           # (B, S*k)
+    one_hot = (flat_e[..., None] == jnp.arange(e, dtype=jnp.int32))
+    rank = jnp.take_along_axis(
+        jnp.cumsum(one_hot, axis=1, dtype=jnp.int32) - 1,
+        flat_e[..., None], axis=-1)[..., 0]                    # (B, S*k)
+    keep = rank < cap
+    slot = jnp.where(keep, flat_e * cap + rank, e * cap)       # overflow bin
+
+    # The ONLY scatter is this (B, E*C) int32 slot->token map (~2 MB): the
+    # SPMD partitioner may replicate it freely.  All (…, d)-sized tensors
+    # below move through BATCHED GATHERS, which partition cleanly with
+    # batch@fsdp — this is what removed the 51 GB/layer replication the
+    # batched scatter-add caused (EXPERIMENTS.md §Perf LM-cell-1).
+    flat_tok = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[:, None], (s, k)).reshape(sk)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    token_of_slot = jnp.full((b, e * cap + 1), s, jnp.int32)   # s = pad token
+    token_of_slot = token_of_slot.at[rows, slot].set(
+        jnp.broadcast_to(flat_tok, (b, sk)))
+    token_of_slot = token_of_slot[:, :e * cap]                 # (B, E*C)
+
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    hidden = jnp.take_along_axis(
+        x_pad, token_of_slot[..., None], axis=1)               # (B, E*C, d)
+    hidden = hidden.reshape(b, e, cap, d)
+    hidden = hints.hint_moe_buffer(hidden)     # batch@fsdp, expert@model
+
+    # ---- expert FFNs (batched einsum over local experts) ---------------------
+    g = jax.nn.silu(jnp.einsum('becd,edf->becf', hidden,
+                               p["wg"].astype(x.dtype)))
+    u = jnp.einsum('becd,edf->becf', hidden, p["wi"].astype(x.dtype))
+    y = jnp.einsum('becf,efd->becd', g * u, p["wo"].astype(x.dtype))
+    y = hints.hint_moe_buffer(y)
+    y = y.reshape(b, e * cap, d)
+
+    # ---- combine: each token GATHERS its k expert outputs --------------------
+    safe_slot = jnp.minimum(slot, e * cap - 1)                 # (B, S*k)
+    picked = jnp.take_along_axis(y, safe_slot[..., None], axis=1)
+    picked = jnp.where(keep[..., None], picked, 0)             # (B, S*k, d)
+    picked = picked.reshape(b, s, k, d)
+    out = jnp.einsum('bskd,bsk->bsd', picked, gate.astype(x.dtype))
+    out = hints.hint_batch(out)
+
+    if cfg.num_shared_experts:
+        out = out + swiglu(p["shared"], x)
+    return out
+
+
+def load_balancing_loss(router_probs: jnp.ndarray,
+                        expert_idx: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Switch-style aux loss (exposed for the training loop; weight in the
+    train config)."""
+    me = jnp.mean(router_probs, axis=0)
+    one_hot = jax.nn.one_hot(expert_idx[:, 0], e)
+    ce = jnp.mean(one_hot, axis=0)
+    return e * jnp.sum(me * ce)

@@ -1,0 +1,108 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping, pure JAX.
+
+Moments are f32 regardless of parameter dtype; an optional f32 master copy
+(``master_weights=True``) makes bf16 training drift-free.  Optimizer state is
+a pytree mirroring the parameters, so it inherits the parameters' sharding
+(ZeRO-style: FSDP-sharded params give FSDP-sharded moments for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    master_weights: bool = True
+
+
+class OptState(NamedTuple):
+    mu: Params
+    nu: Params
+    master: Optional[Params]      # f32 copy when master_weights
+    count: jnp.ndarray
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+        * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init(params: Params, cfg: OptConfig) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+        if cfg.master_weights else None
+    return OptState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros),
+                    master=master, count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (standard practice)."""
+    name = str(path[-1])
+    return not any(s in name for s in ("scale", "b'", "bias", "a_log",
+                                       "d_skip", "dt_bias"))
+
+
+def update(grads: Params, state: OptState, params: Params,
+           cfg: OptConfig) -> Tuple[Params, OptState]:
+    """Returns (new_params, new_state)."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, count)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    ref = state.master if cfg.master_weights else params
+
+    def upd(path, g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step_ = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay and _decay_mask(path):
+            step_ = step_ + cfg.weight_decay * pf
+        return pf - lr * step_, m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(ref)[0]
+    treedef = jax.tree_util.tree_structure(ref)
+    out = [upd(path, g, m, v, p) for (path, p), g, m, v in zip(
+        flat, jax.tree.leaves(grads), jax.tree.leaves(state.mu),
+        jax.tree.leaves(state.nu))]
+    new_ref = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+
+    if cfg.master_weights:
+        new_params = jax.tree.map(lambda r, p: r.astype(p.dtype),
+                                  new_ref, params)
+        return new_params, OptState(mu=mu, nu=nu, master=new_ref, count=count)
+    new_params = jax.tree.map(lambda r, p: r.astype(p.dtype), new_ref, params)
+    return new_params, OptState(mu=mu, nu=nu, master=None, count=count)

@@ -1,0 +1,78 @@
+"""Activation sharding anchors.
+
+XLA SPMD propagates shardings from parameters into activations; at a few
+joints that inference picks pathological layouts (e.g. after the embedding
+gather it inherits the *table's* (vocab@model, d@fsdp) layout, replicating the
+batch dim — which then cascades into full-batch attention and 40 GB logits
+all-gathers).  `hint_batch` pins the canonical activation layout — batch over
+the fsdp axes, everything else unsharded — at those joints.
+
+The hint mesh is installed by the step factories at trace time and is a no-op
+when unset (single-device tests/examples never touch it).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], dp_over_model: bool = False):
+    _state.mesh = mesh
+    _state.dp = dp_over_model
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def dp_over_model() -> bool:
+    return getattr(_state, "dp", False)
+
+
+def hint_batch(x):
+    """Constrain a (B, ...) activation to batch-over-fsdp (+model under the
+    DP posture), rest replicated."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    from repro.sharding import rules
+    spec = rules.data_spec(mesh, x.shape, include_model=dp_over_model())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def hint_logits(x):
+    """(B, S, V): batch over fsdp, vocab over model (TP posture); under the
+    DP posture the model axis belongs to the batch and vocab is unsharded."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    from repro.sharding import rules
+    if dp_over_model():
+        spec = rules.data_spec(mesh, x.shape, include_model=True)
+    else:
+        b = rules.batch_spec(mesh, x.shape[0])
+        axes = list(b) + [None] * (x.ndim - 2) + ["model"]
+        spec = rules._spec(mesh, x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def hint_moe_buffer(x):
+    """(B, E, C, d) MoE dispatch buffer: batch over fsdp, experts over
+    "model" — pinning both sides makes the data<->expert movement exactly one
+    all-to-all instead of replicate-and-mask.  Under the DP posture experts
+    are replicated and the buffer is just batch-sharded."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    from repro.sharding import rules
+    if dp_over_model():
+        spec = rules.data_spec(mesh, x.shape, include_model=True)
+    else:
+        b_axes = rules.batch_spec(mesh, x.shape[0])[0]
+        spec = rules._spec(mesh, x.shape, (b_axes, "model", None, None))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,112 @@
+"""Multi-device tests (subprocess: needs forced host device count).
+
+These exercise the paper's distribution scheme: pyramid branch exchange
+(psum exactness), the sharded simulation loop, and sharded LM training —
+on 8 fake CPU devices.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import octree
+from repro.core.distributed import DistributedPlasticityEngine
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+
+assert len(jax.devices()) == 8
+
+rng = np.random.default_rng(0)
+n = 256
+pos = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+msp_cfg = MSPConfig.calibrated(speedup=100.0)
+fmm_cfg = FMMConfig(c1=8, c2=8)
+
+# --- 1. pyramid branch-exchange exactness -------------------------------
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+deng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg, fmm_cfg,
+                                   EngineConfig(method="fmm"))
+# single-device pyramid on the SAME (morton-sorted) positions
+seng = PlasticityEngine(deng.positions_np, msp_cfg, fmm_cfg,
+                        EngineConfig(method="fmm"))
+ax = jnp.array(rng.integers(0, 3, n), jnp.float32)
+den = jnp.array(rng.integers(0, 3, n), jnp.float32)
+ref_levels = octree.build_pyramid(seng.structure, seng.positions, ax, den,
+                                  fmm_cfg.delta)
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+def local(ax_l, den_l):
+    rank = jax.lax.axis_index("data")
+    lo = rank * (n // 8)
+    pos_l = jax.lax.dynamic_slice_in_dim(deng.positions, lo, n // 8)
+    return deng._local_pyramid(lo, pos_l, ax_l, den_l)
+got_levels = jax.jit(shard_map(
+    local, mesh=mesh, in_specs=(P("data"), P("data")),
+    out_specs=P(), check_rep=False))(ax, den)
+for l, (a, b) in enumerate(zip(ref_levels, got_levels)):
+    np.testing.assert_allclose(np.asarray(a.den_w), np.asarray(b.den_w),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.herm), np.asarray(b.herm),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(a.moms), np.asarray(b.moms),
+                               rtol=2e-3, atol=2e-3)
+print("PYRAMID_OK")
+
+# --- 2. sharded simulation runs and behaves -----------------------------
+st, recs = deng.simulate(deng.init_state(), jax.random.key(0), 1500)
+ca = float(np.asarray(recs.calcium_mean)[-1])
+syn = int(np.asarray(recs.num_synapses)[-1])
+assert np.isfinite(ca) and ca > 0.1, ca
+assert syn > 50, syn
+print("SIM_OK", ca, syn)
+
+# --- 3. sharded LM train step (2x4 mesh, pjit path) ----------------------
+from repro import configs
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
+from repro.models import model as M
+from repro.launch.steps import TrainState
+from repro.data.pipeline import DataConfig, make_batch
+
+cfg = configs.get("qwen3-8b").reduced(layers=2, d_model=64, vocab=128)
+opt_cfg = adamw.OptConfig(warmup_steps=2, total_steps=10)
+mesh2 = make_host_mesh(data=2, model=4)
+params = M.init_params(jax.random.key(0), cfg)
+state = TrainState(params=params, opt=adamw.init(params, opt_cfg),
+                   step=jnp.zeros((), jnp.int32))
+state_sh = S.state_shardings(mesh2, cfg, opt_cfg)
+state = jax.device_put(state, state_sh)
+step_fn = jax.jit(S.make_train_step(cfg, opt_cfg, remat=False, mesh=mesh2),
+                  in_shardings=(state_sh, None), out_shardings=None)
+losses = []
+with mesh2:
+    for i in range(6):
+        batch = make_batch(cfg, DataConfig(seed=1), i, 8, 32)
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+assert losses[-1] < losses[0], losses
+print("LM_SHARDED_OK", losses[0], losses[-1])
+'''
+
+
+@pytest.mark.slow
+def test_distributed_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]
+    assert "PYRAMID_OK" in res.stdout
+    assert "SIM_OK" in res.stdout
+    assert "LM_SHARDED_OK" in res.stdout

@@ -1,0 +1,68 @@
+"""End-to-end MSP simulation behaviour (paper Figs. 1-2 at reduced scale)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+
+
+@pytest.fixture(scope="module")
+def short_runs():
+    rng = np.random.default_rng(42)
+    pos = rng.uniform(0, 1000.0, (400, 3)).astype(np.float32)
+    msp_cfg = MSPConfig.calibrated(speedup=100.0)
+    out = {}
+    for method in ["fmm", "barnes_hut", "direct"]:
+        eng = PlasticityEngine(pos, msp_cfg, FMMConfig(c1=8, c2=8),
+                               EngineConfig(method=method))
+        st, recs = eng.simulate(eng.init_state(), jax.random.key(0), 4000)
+        jax.block_until_ready(recs.calcium_mean)
+        out[method] = (eng, st, recs)
+    return out
+
+
+def test_synapses_form_and_calcium_rises(short_runs):
+    for method, (eng, st, recs) in short_runs.items():
+        syn = np.asarray(recs.num_synapses)
+        ca = np.asarray(recs.calcium_mean)
+        assert syn[-1] > 100, method
+        assert ca[-1] > 0.3, method
+        assert np.isfinite(ca).all() and (ca >= 0).all(), method
+        assert int(st.dropped) == 0, method
+
+
+def test_methods_agree_statistically(short_runs):
+    """FMM vs Barnes-Hut vs direct: same dynamics (paper Figs. 1-2)."""
+    ca = {m: float(np.asarray(r.calcium_mean)[-500:].mean())
+          for m, (_, _, r) in short_runs.items()}
+    syn = {m: float(np.asarray(r.num_synapses)[-500:].mean())
+           for m, (_, _, r) in short_runs.items()}
+    for m in ["fmm", "barnes_hut"]:
+        assert abs(ca[m] - ca["direct"]) / ca["direct"] < 0.1, ca
+        assert abs(syn[m] - syn["direct"]) / syn["direct"] < 0.15, syn
+
+
+def test_edge_list_consistent_with_elements(short_runs):
+    """After a connectivity update no neuron holds more synapses than
+    synaptic elements (the deletion invariant)."""
+    for method, (eng, st, recs) in short_runs.items():
+        from repro.core import synapses
+        out_deg = np.asarray(synapses.out_degree(st.edges, eng.n))
+        in_deg = np.asarray(synapses.in_degree(st.edges, eng.n))
+        ax = np.floor(np.asarray(st.neurons.ax_elems)).astype(int)
+        den = np.floor(np.asarray(st.neurons.den_elems)).astype(int)
+        # elements keep growing between updates; allow the one-update slack
+        assert (out_deg <= ax + eng.engine_cfg.max_requests_per_neuron).all()
+        assert (in_deg <= den + eng.engine_cfg.max_requests_per_neuron).all()
+
+
+def test_determinism(short_runs):
+    eng, _, recs = short_runs["fmm"]
+    st2, recs2 = eng.simulate(eng.init_state(), jax.random.key(0), 4000)
+    np.testing.assert_array_equal(np.asarray(recs.num_synapses),
+                                  np.asarray(recs2.num_synapses))
+    np.testing.assert_allclose(np.asarray(recs.calcium_mean),
+                               np.asarray(recs2.calcium_mean), rtol=1e-6)

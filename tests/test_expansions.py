@@ -1,0 +1,133 @@
+"""Expansion correctness: the paper's Eq. 6/7 machinery vs the direct oracle.
+
+The headline bound is the paper's Fig. 5: at cut-off alpha = beta = (3,3,3)
+the expansion error against direct evaluation stays below 0.125 %.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import direct, expansions as ex, multi_index as mi
+
+DELTA = 750.0 ** 2
+
+
+def _boxes(seed, m=40, n=30, side=300.0, dist=500.0):
+    rng = np.random.default_rng(seed)
+    s_c = rng.uniform(500, 1500, 3)
+    t_c = s_c + rng.uniform(-dist, dist, 3)
+    src = s_c + rng.uniform(-side / 2, side / 2, (m, 3))
+    tgt = t_c + rng.uniform(-side / 2, side / 2, (n, 3))
+    w = rng.uniform(0, 5, m)
+    a = rng.uniform(0, 5, n)
+    return (jnp.array(x, jnp.float32) for x in (src, tgt, w, a, s_c, t_c))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_hermite_matches_direct_fig5(seed):
+    src, tgt, w, a, s_c, t_c = _boxes(seed)
+    u = direct.attraction(tgt, src, w, DELTA)
+    coeff = ex.hermite_coefficients(src, w, s_c, DELTA)
+    uh = ex.eval_hermite(coeff, tgt, s_c, DELTA)
+    rel = jnp.max(jnp.abs(uh - u) / jnp.maximum(u, 1e-9))
+    assert rel < 0.00125          # paper Fig. 5: <= 0.125 %
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_taylor_matches_direct(seed):
+    src, tgt, w, a, s_c, t_c = _boxes(seed)
+    u = direct.attraction(tgt, src, w, DELTA)
+    coeff = ex.taylor_coefficients(src, w, t_c, DELTA)
+    ut = ex.eval_taylor(coeff, tgt, t_c, DELTA)
+    rel = jnp.max(jnp.abs(ut - u) / jnp.maximum(u, 1e-9))
+    assert rel < 0.00125
+
+
+def test_m2l_translation():
+    src, tgt, w, a, s_c, t_c = _boxes(7)
+    u = direct.attraction(tgt, src, w, DELTA)
+    herm = ex.hermite_coefficients(src, w, s_c, DELTA)
+    tay = ex.m2l(herm, s_c, t_c, DELTA)
+    um = ex.eval_taylor(tay, tgt, t_c, DELTA)
+    rel = jnp.max(jnp.abs(um - u) / jnp.maximum(u, 1e-9))
+    assert rel < 0.0025           # two truncations stacked
+
+
+def test_m2m_recentering_exact_in_coefficients():
+    src, tgt, w, a, s_c, t_c = _boxes(9)
+    a1 = ex.hermite_coefficients(src, w, s_c, DELTA)
+    a_direct = ex.hermite_coefficients(src, w, t_c, DELTA)
+    a_shift = ex.m2m(a1, s_c, t_c, DELTA)
+    # m2m is exact only to truncation order; compare low orders tightly
+    low = np.where(mi.multi_abs() <= 1)[0]
+    np.testing.assert_allclose(np.asarray(a_shift)[low],
+                               np.asarray(a_direct)[low], rtol=0.15)
+
+
+def test_separable_m2l_equals_dense():
+    rng = np.random.default_rng(3)
+    moms = jnp.array(rng.uniform(0, 1, (9, 8, 64)), jnp.float32)
+    herm = jnp.array(rng.uniform(-1, 1, (9, 8, 64)), jnp.float32)
+    axc = jnp.array(rng.uniform(0, 2000, (9, 8, 3)), jnp.float32)
+    dc = jnp.array(rng.uniform(0, 2000, (9, 8, 3)), jnp.float32)
+    dense = ex.box_mass_taylor_log_dense(moms, axc, herm, dc, DELTA)
+    sep = ex.box_mass_taylor_log(moms, axc, herm, dc, DELTA)
+    np.testing.assert_allclose(np.asarray(sep), np.asarray(dense),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_log_masses_match_linear_paths():
+    src, tgt, w, a, s_c, t_c = _boxes(11)
+    herm = ex.hermite_coefficients(src, w, s_c, DELTA)
+    mass_lin = ex.box_mass_hermite(jnp.sum(a), t_c, herm, s_c, DELTA)
+    mass_log = ex.box_mass_hermite_log(jnp.sum(a), t_c, herm, s_c, DELTA)
+    np.testing.assert_allclose(float(jnp.exp(mass_log)), float(mass_lin),
+                               rtol=1e-4)
+
+    moms = ex.axon_moments(tgt, a, t_c, DELTA)
+    mt_lin = ex.box_mass_taylor(moms, t_c, herm, s_c, DELTA)
+    mt_log = ex.box_mass_taylor_log(moms, t_c, herm, s_c, DELTA)
+    np.testing.assert_allclose(float(jnp.exp(mt_log)), float(mt_lin),
+                               rtol=1e-3)
+
+
+def test_log_mass_underflow_safe():
+    """Far-apart boxes: linear path underflows to 0, log path stays ranked."""
+    src, tgt, w, a, s_c, t_c = _boxes(5)
+    far = t_c + 50_000.0
+    herm = ex.hermite_coefficients(src, w, s_c, DELTA)
+    lg1 = ex.box_mass_hermite_log(jnp.sum(a), far, herm, s_c, DELTA)
+    lg2 = ex.box_mass_hermite_log(jnp.sum(a), far + 1000.0, herm, s_c, DELTA)
+    assert np.isfinite(float(lg1)) and np.isfinite(float(lg2))
+    assert float(lg1) > float(lg2)      # nearer stays more attractive
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_hermite_functions_recurrence_property(seed):
+    """h_{n+1}(t) = 2t h_n(t) - 2n h_{n-1}(t) and h_n = exp(-t^2) H_n."""
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.uniform(-3, 3, (5, 3)), jnp.float32)
+    h = mi.hermites(x, p=5)
+    hp = mi.hermite_polys(x, p=5)
+    env = jnp.exp(-jnp.sum(x * x, axis=-1))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(env[:, None] * hp),
+                               rtol=2e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_attraction_positive_and_monotone(seed):
+    """Kernel positivity and monotone decay with distance (Eq. 1 structure)."""
+    rng = np.random.default_rng(seed)
+    src = jnp.array(rng.uniform(0, 100, (20, 3)), jnp.float32)
+    w = jnp.array(rng.uniform(0.1, 2, (20,)), jnp.float32)
+    t0 = jnp.array([[50.0, 50.0, 50.0]])
+    t1 = t0 + jnp.array([[5000.0, 0, 0]])
+    u0 = direct.attraction(t0, src, w, DELTA)[0]
+    u1 = direct.attraction(t1, src, w, DELTA)[0]
+    assert float(u0) > 0 and float(u1) >= 0
+    assert float(u0) > float(u1)

@@ -1,0 +1,72 @@
+"""MSP neuron dynamics (paper Sec. 3.1 / Table 1)."""
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import msp
+from repro.core.msp import MSPConfig
+
+
+def test_growth_curve_intersections():
+    cfg = MSPConfig()
+    for eta in (cfg.eta_axon, cfg.eta_dendrite):
+        z_eta = float(msp.growth_curve(jnp.array(eta), eta, cfg))
+        z_eps = float(msp.growth_curve(jnp.array(cfg.eps), eta, cfg))
+        assert abs(z_eta) < 1e-9 and abs(z_eps) < 1e-9
+        # positive inside (eta, eps), negative outside
+        mid = (eta + cfg.eps) / 2
+        assert float(msp.growth_curve(jnp.array(mid), eta, cfg)) > 0
+        assert float(msp.growth_curve(jnp.array(cfg.eps + 0.2), eta, cfg)) < 0
+        assert float(msp.growth_curve(jnp.array(eta - 0.05), eta, cfg)) < 0
+        # maximum growth equals mu at the midpoint
+        assert abs(float(msp.growth_curve(jnp.array(mid), eta, cfg))
+                   - cfg.mu) < 1e-9
+
+
+def test_refractory_blocks_spiking():
+    cfg = MSPConfig(x0=1.5, background=0.0, w_syn=0.0)   # always above 1
+    state = msp.init_neurons(4, cfg)
+    spikes = []
+    for i in range(6):
+        state = msp.step_neurons(state, jnp.zeros(4), jax.random.key(i), cfg)
+        spikes.append(np.asarray(state.spiked))
+    spikes = np.stack(spikes)
+    assert spikes[0].all()
+    # next `refractory` steps: silent
+    assert not spikes[1:cfg.refractory + 1].any()
+    assert spikes[cfg.refractory + 1].all()
+
+
+def test_calcium_tracks_rate():
+    """Ca* = rate * beta / tau_ca at equilibrium (long-run average)."""
+    cfg = MSPConfig.calibrated(speedup=100.0)
+    state = msp.init_neurons(500, cfg)
+    n_steps = 3000
+    def body(carry, i):
+        st = carry
+        st = msp.step_neurons(st, jnp.zeros(500),
+                              jax.random.fold_in(jax.random.key(0), i), cfg)
+        return st, (st.calcium.mean(), st.spiked.mean())
+    state, (ca, rate) = jax.lax.scan(body, state, jnp.arange(n_steps))
+    r = float(rate[-1000:].mean())
+    ca_pred = r * cfg.beta_ca / cfg.tau_ca
+    ca_obs = float(ca[-1000:].mean())
+    assert abs(ca_obs - ca_pred) / ca_pred < 0.15
+
+
+def test_calibrated_background_rate_in_growth_window():
+    """The calibrated config must bootstrap: background-only calcium must sit
+    inside (eta_axon, eps) so axons start growing (DESIGN.md §8)."""
+    cfg = MSPConfig.calibrated(speedup=100.0)
+    state = msp.init_neurons(1000, cfg)
+    def body(carry, i):
+        st = carry
+        st = msp.step_neurons(st, jnp.zeros(1000),
+                              jax.random.fold_in(jax.random.key(1), i), cfg)
+        return st, st.calcium.mean()
+    state, ca = jax.lax.scan(body, state, jnp.arange(4000))
+    ca_eq = float(ca[-500:].mean())
+    assert cfg.eta_axon < ca_eq < cfg.eps

@@ -1,0 +1,93 @@
+"""Octree structure/pyramid invariants (property-based where useful)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import octree
+
+DELTA = 750.0 ** 2
+
+
+def _structure(seed, n=200, domain=1000.0, depth=3):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, domain, (n, 3)).astype(np.float32)
+    return pos, octree.build_structure(pos, domain, depth)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_structure_invariants(seed):
+    pos, s = _structure(seed)
+    # every neuron's box id at level l is its leaf id shifted
+    for l in range(s.depth + 1):
+        ids = s.box_of(l)
+        assert ids.min() >= 0 and ids.max() < s.boxes_at(l)
+        if l < s.depth:
+            child = s.box_of(l + 1)
+            np.testing.assert_array_equal(child >> 3, ids)
+    # leaf offsets partition the sorted order
+    occ = np.diff(s.leaf_start)
+    assert occ.sum() == s.n
+    assert occ.max() == s.max_leaf
+    # sort permutation is a bijection
+    assert np.array_equal(np.sort(s.order), np.arange(s.n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_centers_invert_morton(seed):
+    pos, s = _structure(seed, n=50, depth=2)
+    for l in range(s.depth + 1):
+        c = s.centers_at(l)
+        side = s.box_side(l)
+        cells = np.floor(c / side).astype(np.int64)
+        codes = octree.morton_encode(cells)
+        np.testing.assert_array_equal(codes, np.arange(s.boxes_at(l)))
+
+
+def test_pyramid_conservation():
+    """Mass and weighted position are conserved across every level."""
+    pos, s = _structure(0)
+    rng = np.random.default_rng(1)
+    ax = jnp.array(rng.integers(0, 4, s.n), jnp.float32)
+    den = jnp.array(rng.integers(0, 4, s.n), jnp.float32)
+    levels = octree.build_pyramid(s, jnp.array(pos), ax, den, DELTA)
+    for lvl in levels:
+        np.testing.assert_allclose(float(lvl.ax_w.sum()), float(ax.sum()),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(lvl.den_w.sum()), float(den.sum()),
+                                   rtol=1e-5)
+        # centroid decomposition: weighted centroids sum to global weighted sum
+        np.testing.assert_allclose(
+            np.asarray((lvl.den_c * lvl.den_w[:, None]).sum(0)),
+            np.asarray((den[:, None] * pos).sum(0)), rtol=1e-3)
+    # moment beta=0 equals the axon weight; hermite alpha=0 the dendrite weight
+    for lvl in levels:
+        np.testing.assert_allclose(np.asarray(lvl.moms[:, 0]),
+                                   np.asarray(lvl.ax_w), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(lvl.herm[:, 0]),
+                                   np.asarray(lvl.den_w), rtol=1e-5)
+
+
+def test_level_expansion_reproduces_leaf_attraction():
+    """Box Hermite coefficients evaluated at a probe reproduce the direct
+    attraction of the box's neurons (integration of octree + expansions)."""
+    from repro.core import direct, expansions as ex
+    pos, s = _structure(3, n=300, depth=2)
+    rng = np.random.default_rng(4)
+    den = jnp.array(rng.uniform(0, 3, s.n), jnp.float32)
+    ax = jnp.ones((s.n,), jnp.float32)
+    levels = octree.build_pyramid(s, jnp.array(pos), ax, den, DELTA)
+    lvl = levels[2]
+    probe = jnp.array([[800.0, 200.0, 500.0]], jnp.float32)
+    box = 13
+    ids = s.box_of(2)
+    members = ids == box
+    u_direct = direct.attraction(probe, jnp.array(pos[members]),
+                                 den[np.where(members)[0]], DELTA)[0]
+    u_h = ex.eval_hermite(lvl.herm[box], probe,
+                          jnp.asarray(s.centers_at(2)[box]), DELTA)[0]
+    if float(u_direct) > 1e-6:
+        np.testing.assert_allclose(float(u_h), float(u_direct), rtol=0.01)

@@ -1,0 +1,80 @@
+"""Roofline methodology validation (EXPERIMENTS.md §Roofline).
+
+1. Demonstrates the scan-undercount that forces analytic accounting:
+   cost_analysis() counts a while body once.
+2. Validates the analytic forward-flop estimator against cost_analysis()
+   on probe configs whose scans have trip count 1 (no undercount).
+"""
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from repro import configs
+from repro.models import model as M
+from repro.launch import steps as S
+from repro.models.config import ShapeConfig
+
+
+def test_cost_analysis_counts_scan_body_once():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def with_scan(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(ws.shape[0]):
+            x = jnp.tanh(x @ ws[i])
+        return x
+
+    x = jnp.zeros((64, 128))
+    ws = jnp.zeros((8, 128, 128))
+    f_scan = jax.jit(with_scan).lower(x, ws).compile().cost_analysis()["flops"]
+    f_unr = jax.jit(unrolled).lower(x, ws).compile().cost_analysis()["flops"]
+    assert f_unr == pytest.approx(8 * f_scan, rel=0.05)
+
+
+@pytest.mark.parametrize("arch,tol", [("qwen3-8b", 0.05),
+                                      ("mamba2-1.3b", 0.05),
+                                      ("deepseek-v2-lite-16b", 0.10),
+                                      ("hubert-xlarge", 0.08)])
+def test_analytic_forward_flops_match_hlo(arch, tol):
+    import flops_model as FM
+    base = configs.get(arch)
+    kw = {"num_layers": 1}
+    if base.family == "moe":
+        kw["first_dense_layers"] = 0
+    cfg = dataclasses.replace(base, **kw)
+    params = S.abstract_params(cfg)
+    b, s = 4, 512
+    if cfg.family == "audio":
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    compiled = jax.jit(lambda p, x: M.forward_train(p, x, cfg)) \
+        .lower(params, inputs).compile()
+    hlo_flops = compiled.cost_analysis()["flops"]
+    est = FM.cell_cost(cfg, ShapeConfig("probe", s, b, "prefill"), 1)
+    assert est.flops == pytest.approx(hlo_flops, rel=tol), \
+        (est.flops, hlo_flops)
+
+
+def test_param_count_analytic_vs_tree():
+    import flops_model as FM
+    for arch in ("yi-6b", "llama4-maverick-400b-a17b"):
+        cfg = configs.get(arch)
+        pc = FM.param_count(cfg)
+        assert pc["total"] > pc["active"] if cfg.num_experts \
+            else pc["total"] == pc["active"]
+        # llama4's census should land near its nameplate
+        if arch.startswith("llama4"):
+            assert 3.4e11 < pc["total"] < 4.8e11, pc["total"]
+            assert 1.2e10 < pc["active"] < 2.4e10, pc["active"]

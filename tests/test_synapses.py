@@ -1,0 +1,118 @@
+"""Synapse store: deletion, conflict resolution, insertion (paper phase 3)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import synapses
+
+
+def test_degrees_and_input():
+    st_ = synapses.SynapseState(
+        src=jnp.array([0, 0, 1, 2, 3], jnp.int32),
+        dst=jnp.array([1, 2, 2, 0, 0], jnp.int32),
+        valid=jnp.array([True, True, True, True, False]))
+    out = np.asarray(synapses.out_degree(st_, 4))
+    ind = np.asarray(synapses.in_degree(st_, 4))
+    np.testing.assert_array_equal(out, [2, 1, 1, 0])
+    np.testing.assert_array_equal(ind, [1, 1, 2, 0])
+    spiked = jnp.array([True, False, True, False])
+    syn_in = np.asarray(synapses.synaptic_input(st_, spiked))
+    # edges from spiking 0 -> {1,2}; from spiking 2 -> {0}; invalid 3->0 ignored
+    np.testing.assert_array_equal(syn_in, [1, 1, 1, 0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_conflict_resolution_properties(seed):
+    rng = np.random.default_rng(seed)
+    n = 40
+    partner = jnp.array(
+        np.where(rng.random(n) < 0.8, rng.integers(0, n, n), -1), jnp.int32)
+    req = jnp.array(rng.integers(0, 4, n), jnp.int32)
+    cap = jnp.array(rng.integers(0, 3, n), jnp.int32)
+    acc = np.asarray(synapses.resolve_conflicts(partner, req, cap,
+                                                jax.random.key(seed)))
+    p = np.asarray(partner); r = np.asarray(req); c = np.asarray(cap)
+    assert (acc >= 0).all()
+    assert (acc <= np.where(p >= 0, r, 0)).all()          # never over-request
+    # per-dendrite: total accepted <= capacity
+    for j in range(n):
+        assert acc[p == j].sum() <= c[j]
+    # work conservation: if requests for j under-subscribe capacity, all accepted
+    for j in range(n):
+        tot = r[(p == j)].sum()
+        if tot <= c[j]:
+            assert acc[p == j].sum() == tot
+
+
+def test_conflict_resolution_oversubscribed_exact_fill():
+    """Five axons wanting two dendrites (the paper's example): exactly the
+    capacity is granted."""
+    partner = jnp.array([7, 7, 7, 7, 7, -1, -1, -1], jnp.int32)
+    req = jnp.array([1, 1, 1, 1, 1, 0, 0, 0], jnp.int32)
+    cap = jnp.zeros((8,), jnp.int32).at[7].set(2)
+    acc = np.asarray(synapses.resolve_conflicts(partner, req, cap,
+                                                jax.random.key(0)))
+    assert acc.sum() == 2
+    assert (acc <= 1).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_insert_then_degrees(seed):
+    rng = np.random.default_rng(seed)
+    n, cap = 20, 128
+    state = synapses.empty(cap)
+    partner = jnp.array(rng.integers(0, n, n), jnp.int32)
+    accepted = jnp.array(rng.integers(0, 3, n), jnp.int32)
+    state, dropped = synapses.insert(state, partner, accepted, 4)
+    assert int(dropped) == 0
+    out = np.asarray(synapses.out_degree(state, n))
+    np.testing.assert_array_equal(out, np.asarray(accepted))
+    # dst multiset matches
+    ind = np.asarray(synapses.in_degree(state, n))
+    expect = np.zeros(n, int)
+    for i, (pa, ac) in enumerate(zip(np.asarray(partner),
+                                     np.asarray(accepted))):
+        expect[pa] += ac
+    np.testing.assert_array_equal(ind, expect)
+
+
+def test_insert_overflow_reports_dropped():
+    state = synapses.empty(3)
+    partner = jnp.array([1, 0], jnp.int32)
+    accepted = jnp.array([3, 2], jnp.int32)
+    state, dropped = synapses.insert(state, partner, accepted, 4)
+    assert int(dropped) == 2
+    assert int(state.valid.sum()) == 3
+
+
+def test_delete_excess_exact():
+    """Neuron with 5 out-edges and floor(elements)=2 deletes exactly 3."""
+    e = 16
+    src = jnp.zeros((e,), jnp.int32)
+    dst = jnp.array([1] * 5 + [0] * 11, jnp.int32)
+    valid = jnp.array([True] * 5 + [False] * 11)
+    state = synapses.SynapseState(src=src, dst=dst, valid=valid)
+    ax = jnp.array([2.9, 10.0], jnp.float32)
+    den = jnp.array([10.0, 10.0], jnp.float32)
+    out = synapses.delete_excess(state, ax, den, jax.random.key(0))
+    assert int(synapses.out_degree(out, 2)[0]) == 2
+
+
+def test_delete_excess_dendrite_side_notifies_axon_side():
+    """Dendrite-side deletion removes edges globally (axon side sees it)."""
+    e = 8
+    src = jnp.array([0, 1, 2, 3, 0, 0, 0, 0], jnp.int32)
+    dst = jnp.array([5, 5, 5, 5, 0, 0, 0, 0], jnp.int32)
+    valid = jnp.array([True] * 4 + [False] * 4)
+    state = synapses.SynapseState(src=src, dst=dst, valid=valid)
+    n = 6
+    ax = jnp.full((n,), 10.0)
+    den = jnp.zeros((n,)).at[5].set(1.4)      # dendrite 5 keeps only 1
+    out = synapses.delete_excess(state, ax, den, jax.random.key(1))
+    assert int(synapses.in_degree(out, n)[5]) == 1
+    assert int(out.valid.sum()) == 1

@@ -1,0 +1,105 @@
+"""Stochastic dual-tree descent behaviour (paper Algorithms 1 & 2)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import octree, traversal
+from repro.core.traversal import FMMConfig
+
+
+def _setup(seed=0, n=400, domain=1000.0, depth=3):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, domain, (n, 3)).astype(np.float32)
+    s = octree.build_structure(pos, domain, depth)
+    ax = jnp.array(rng.integers(0, 3, n), jnp.float32)
+    den = jnp.array(rng.integers(0, 3, n), jnp.float32)
+    return pos, s, ax, den
+
+
+@pytest.mark.parametrize("tier", ["paper", "direct", "hermite", "taylor"])
+def test_descent_valid_targets(tier):
+    pos, s, ax, den = _setup()
+    cfg = FMMConfig(tier_mode=tier, c1=4, c2=4)
+    levels = octree.build_pyramid(s, jnp.array(pos), ax, den, cfg.delta)
+    tgt = traversal.descend(s, levels, jax.random.key(0), cfg)
+    tgt = np.asarray(tgt)
+    leaf_den = np.asarray(levels[-1].den_w)
+    leaf_ax = np.asarray(levels[-1].ax_w)
+    active = leaf_ax > 0
+    # every axon-bearing leaf got a target, and that target has dendrites
+    assert (tgt[active] >= 0).all()
+    assert (leaf_den[tgt[active]] > 0).all()
+    # leaves without axons are inactive
+    assert (tgt[~active] == -1).all()
+
+
+def test_descent_deterministic_given_key():
+    pos, s, ax, den = _setup(1)
+    cfg = FMMConfig(c1=4, c2=4)
+    levels = octree.build_pyramid(s, jnp.array(pos), ax, den, cfg.delta)
+    t1 = traversal.descend(s, levels, jax.random.key(7), cfg)
+    t2 = traversal.descend(s, levels, jax.random.key(7), cfg)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    t3 = traversal.descend(s, levels, jax.random.key(8), cfg)
+    assert not np.array_equal(np.asarray(t1), np.asarray(t3))
+
+
+def test_partners_no_autapse_and_have_vacancy():
+    pos, s, ax, den = _setup(2)
+    cfg = FMMConfig(c1=4, c2=4)
+    levels = octree.build_pyramid(s, jnp.array(pos), ax, den, cfg.delta)
+    partner = traversal.find_partners(s, levels, jnp.array(pos), ax, den,
+                                      jax.random.key(0), cfg)
+    partner = np.asarray(partner)
+    req = partner >= 0
+    n = s.n
+    assert (partner[req] != np.arange(n)[req]).all()        # no autapses
+    assert (np.asarray(den)[partner[req]] > 0).all()        # partner vacancy
+    assert (np.asarray(ax)[req] >= 1).all()                 # only axon-bearing
+
+
+def test_locality_preference():
+    """Axons in a near cluster should overwhelmingly pick near dendrites
+    (kernel locality, sigma=750 vs 6000 um separation)."""
+    rng = np.random.default_rng(3)
+    near = rng.uniform(0, 500, (150, 3))
+    far = rng.uniform(5500, 6000, (150, 3))
+    pos = np.concatenate([near, far]).astype(np.float32)
+    s = octree.build_structure(pos, 6000.0, 3)
+    ax = jnp.array([1.0] * 150 + [0.0] * 150)     # axons only in near cluster
+    den = jnp.ones((300,), jnp.float32)
+    cfg = FMMConfig(c1=4, c2=4)
+    levels = octree.build_pyramid(s, jnp.array(pos), ax, den, cfg.delta)
+    partner = np.asarray(traversal.find_partners(
+        s, levels, jnp.array(pos), ax, den, jax.random.key(0), cfg))
+    chosen = partner[:150]
+    chosen = chosen[chosen >= 0]
+    assert len(chosen) > 100
+    frac_near = float(np.mean(chosen < 150))
+    assert frac_near > 0.95
+
+
+def test_tier_modes_agree_statistically():
+    """The expansion tiers should induce (nearly) the same choice
+    distribution as pure point-mass descent — Fig. 1/2's premise."""
+    pos, s, ax, den = _setup(4, n=600)
+    partners = {}
+    for tier in ["direct", "paper"]:
+        cfg = FMMConfig(tier_mode=tier, c1=4, c2=4)
+        levels = octree.build_pyramid(s, jnp.array(pos), ax, den, cfg.delta)
+        ps = []
+        for k in range(5):
+            p = traversal.find_partners(s, levels, jnp.array(pos), ax, den,
+                                        jax.random.key(k), cfg)
+            ps.append(np.asarray(p))
+        partners[tier] = np.stack(ps)
+    # compare mean partner distance distributions
+    def mean_dist(ps):
+        d = []
+        for p in ps:
+            m = p >= 0
+            d.append(np.linalg.norm(pos[m] - pos[p[m]], axis=1).mean())
+        return np.mean(d)
+    d1, d2 = mean_dist(partners["direct"]), mean_dist(partners["paper"])
+    assert abs(d1 - d2) / d1 < 0.15
