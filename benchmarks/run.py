@@ -47,6 +47,10 @@ def main() -> None:
                   f"bound={r['paper_bound_pct']}%")
     run("complexity_sweep", figures.complexity_sweep,
         lambda r: f"fmm_per_neuron@512k={r[512_000]['fmm_per_neuron']:.2f}")
+    run("fig_ensemble", figures.fig_ensemble,
+        lambda r: f"speedup={r['speedup']:.2f};"
+                  f"batched_rps={r['batched_replicas_per_s']:.2f};"
+                  f"sequential_rps={r['sequential_replicas_per_s']:.2f}")
 
     with open("bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)

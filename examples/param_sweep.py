@@ -1,0 +1,65 @@
+"""Parameter sweep demo: K differently-parameterised brains in ONE program.
+
+    PYTHONPATH=src python examples/param_sweep.py
+
+The sweep workflow (launch/sweep.py over core/ensemble.py):
+
+  1. `sweep.grid(...)` builds the cartesian product of named knob lists.
+     Sweepable knobs are the traced scalars of `engine.KernelParams`:
+     `sigma` (probability kernel scale, paper Table 1), `c1`/`c2` (the
+     Alg. 2 evaluation-tier thresholds), and `inhibitory_fraction` (the
+     beyond-paper signed-population extension).
+  2. `PlasticityEngine(...)` holds the STATIC structure shared by every
+     replica: positions, octree, capacities.  When sweeping `sigma`,
+     construct it with the sweep's smallest sigma so the trace-time
+     expansion-validity guard stays conservative for every replica.
+  3. `sweep.run_sweep(engine, configs, num_steps, replicates=R)` packs the
+     grid into (K,) KernelParams columns, splits K independent RNG streams,
+     and runs all K = len(configs) * R replicas through one vmapped (and,
+     given a mesh from `launch.mesh.make_ensemble_mesh`, shard_mapped)
+     `lax.scan` — one compilation, K trajectories.
+  4. `sweep.summarize(result)` reduces each replica's StepRecord trajectory
+     to a row: tail-window calcium, final synapse count, spike rate.
+
+~2 minutes on CPU.  The printout shows the two levers doing what the model
+predicts: smaller sigma keeps connectivity local (fewer distant partners,
+same homeostatic calcium), and a nonzero inhibitory fraction lowers the
+network's spike rate, slowing synapse accumulation.
+"""
+import numpy as np
+
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.launch import sweep
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 400
+    positions = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+
+    configs = sweep.grid(sigma=[300.0, 750.0],
+                         inhibitory_fraction=[0.0, 0.25])
+    engine = PlasticityEngine(
+        positions,
+        msp_cfg=MSPConfig.calibrated(speedup=100.0),    # fast preset
+        fmm_cfg=FMMConfig(c1=8, c2=8, sigma=300.0),     # sweep-min sigma
+        engine_cfg=EngineConfig(method="fmm"))
+
+    k = len(configs)
+    print(f"sweeping {k} configs x 2 seed replicates = {2 * k} replicas, "
+          f"{n} neurons each, one compiled program")
+    result = sweep.run_sweep(engine, configs, num_steps=6000, seed=0,
+                             replicates=2)
+
+    print(f"\n{'sigma':>7} {'inh_frac':>9} {'calcium':>8} {'synapses':>9} "
+          f"{'spike_rate':>11}")
+    for row in sweep.summarize(result):
+        print(f"{row['sigma']:7.0f} {row['inhibitory_fraction']:9.2f} "
+              f"{row['calcium_end']:8.3f} {row['synapses_end']:9d} "
+              f"{row['spike_rate']:11.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
 
 from repro.core import barnes_hut, msp, octree, synapses, traversal
 from repro.core.engine import (EngineConfig, PlasticityEngine, SimState,
@@ -197,7 +198,7 @@ class DistributedPlasticityEngine(PlasticityEngine):
         sharded = shard_map(local_step, mesh=self.mesh,
                             in_specs=(state_spec, P()),
                             out_specs=(state_spec, rec_spec),
-                            check_rep=False)
+                            **SHARD_MAP_NO_CHECK)
         return jax.jit(sharded)
 
     @functools.partial(jax.jit, static_argnums=(0, 3))

@@ -47,6 +47,30 @@ class StepRecord(NamedTuple):
     spike_rate: jnp.ndarray
 
 
+class KernelParams(NamedTuple):
+    """Traced per-run overrides of scalar kernel knobs.
+
+    The static configs bake these into the compiled program as constants; an
+    ensemble run (core/ensemble.py) instead batches one value per replica and
+    `vmap`s the step over them, so K differently-parameterised simulations
+    share one compiled program.  All fields are float32 scalars (per-replica
+    under vmap); `from_configs` fills them from the static configs so the
+    params path is a numerical identity when nothing is swept.
+    """
+    sigma: jnp.ndarray                 # probability kernel scale (FMMConfig)
+    c1: jnp.ndarray                    # dendrite-count tier threshold (Alg. 2)
+    c2: jnp.ndarray                    # axon-count tier threshold (Alg. 2)
+    inhibitory_fraction: jnp.ndarray   # fraction of inhibitory neurons [0, 1)
+
+    @classmethod
+    def from_configs(cls, fmm_cfg: FMMConfig,
+                     engine_cfg: "EngineConfig") -> "KernelParams":
+        f32 = lambda v: jnp.asarray(v, jnp.float32)
+        return cls(sigma=f32(fmm_cfg.sigma), c1=f32(fmm_cfg.c1),
+                   c2=f32(fmm_cfg.c2),
+                   inhibitory_fraction=f32(engine_cfg.inhibitory_fraction))
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     method: str = "fmm"                 # fmm | barnes_hut | direct
@@ -93,9 +117,39 @@ class PlasticityEngine:
                         step=jnp.zeros((), jnp.int32),
                         dropped=jnp.zeros((), jnp.int32))
 
+    # -- traced-knob plumbing ----------------------------------------------
+    def _runtime_fmm_cfg(self, params: Optional[KernelParams]) -> FMMConfig:
+        """FMMConfig with traced scalars substituted for the swept knobs.
+
+        The expansion-validity guard must stay a trace-time decision, so it
+        keeps the STATIC base delta (callers sweeping sigma should construct
+        the engine with the smallest sigma of the sweep as the static value —
+        the guard is then conservative for every replica)."""
+        if params is None:
+            return self.fmm_cfg
+        guard = self.fmm_cfg.guard_delta
+        return dataclasses.replace(
+            self.fmm_cfg, sigma=params.sigma, c1=params.c1, c2=params.c2,
+            guard_delta=guard if guard is not None
+            else float(self.fmm_cfg.delta))
+
+    def _runtime_sign(self, params: Optional[KernelParams]):
+        """(n,) +1/-1 synapse sign vector from a traced inhibitory fraction
+        (None = the static config's precomputed vector)."""
+        if params is None:
+            return self.sign
+        # floor, like the static constructor's int(f * n) — idx < f*n alone
+        # would make ceil(f*n) neurons inhibitory when f*n is not exactly
+        # representable (0.3 * 200 = 60.000004 in float32).
+        idx = jnp.arange(self.n, dtype=jnp.float32)
+        n_inh = jnp.floor(params.inhibitory_fraction * self.n)
+        return jnp.where(idx < n_inh, -1.0, 1.0).astype(jnp.float32)
+
     # -- phase 3: connectivity update --------------------------------------
-    def connectivity_update(self, state: SimState, key: jax.Array) -> SimState:
+    def connectivity_update(self, state: SimState, key: jax.Array,
+                            params: Optional[KernelParams] = None) -> SimState:
         n = self.n
+        fmm_cfg = self._runtime_fmm_cfg(params)
         kdel, kfind, kconf = jax.random.split(key, 3)
         neurons, edges = state.neurons, state.edges
 
@@ -113,21 +167,21 @@ class PlasticityEngine:
         method = self.engine_cfg.method
         if method == "direct":
             partner = barnes_hut.find_partners_direct(
-                self.positions, ax_vac, den_vac, kfind, self.fmm_cfg)
+                self.positions, ax_vac, den_vac, kfind, fmm_cfg)
         else:
             build = octree.build_pyramid_m2m \
                 if self.engine_cfg.pyramid == "m2m" else octree.build_pyramid
             levels = build(self.structure, self.positions,
                            ax_vac, den_vac,
-                           self.fmm_cfg.delta, self.fmm_cfg.p)
+                           fmm_cfg.delta, fmm_cfg.p)
             if method == "fmm":
                 partner = traversal.find_partners(
                     self.structure, levels, self.positions, ax_vac, den_vac,
-                    kfind, self.fmm_cfg)
+                    kfind, fmm_cfg)
             elif method == "barnes_hut":
                 partner = barnes_hut.find_partners_bh(
                     self.structure, levels, self.positions, ax_vac, den_vac,
-                    kfind, self.fmm_cfg)
+                    kfind, fmm_cfg)
             else:
                 raise ValueError(f"unknown method {method!r}")
 
@@ -141,17 +195,30 @@ class PlasticityEngine:
         return state._replace(edges=edges, dropped=state.dropped + dropped)
 
     # -- one fused simulation step -----------------------------------------
-    def step(self, state: SimState, key: jax.Array) -> Tuple[SimState, StepRecord]:
+    def step(self, state: SimState, key: jax.Array,
+             params: Optional[KernelParams] = None,
+             do_update: Optional[jax.Array] = None
+             ) -> Tuple[SimState, StepRecord]:
+        """One activity step (+ the periodic connectivity update).
+
+        params:    optional traced kernel knobs (ensemble sweeps).
+        do_update: optional scalar bool overriding the step-counter schedule.
+                   The ensemble path computes it from the UNBATCHED scan index
+                   so that under `vmap` the update stays a `lax.cond` (a
+                   batched predicate would lower to a select that runs the
+                   expensive connectivity branch every step for every replica).
+        """
         kact, kconn = jax.random.split(key)
         syn_in = synapses.synaptic_input(state.edges, state.neurons.spiked,
-                                         self.sign)
+                                         self._runtime_sign(params))
         neurons = msp.step_neurons(state.neurons, syn_in, kact, self.msp_cfg)
         state = state._replace(neurons=neurons, step=state.step + 1)
 
-        do_update = (state.step % self.msp_cfg.update_interval) == 0
+        if do_update is None:
+            do_update = (state.step % self.msp_cfg.update_interval) == 0
         state = jax.lax.cond(
             do_update,
-            lambda s: self.connectivity_update(s, kconn),
+            lambda s: self.connectivity_update(s, kconn, params),
             lambda s: s,
             state)
         rec = StepRecord(
@@ -163,11 +230,15 @@ class PlasticityEngine:
 
     # -- whole-simulation scan ----------------------------------------------
     @functools.partial(jax.jit, static_argnums=(0, 3))
-    def simulate(self, state: SimState, key: jax.Array,
-                 num_steps: int) -> Tuple[SimState, StepRecord]:
+    def simulate(self, state: SimState, key: jax.Array, num_steps: int,
+                 params: Optional[KernelParams] = None
+                 ) -> Tuple[SimState, StepRecord]:
         def body(carry, i):
             st, = carry
-            st, rec = self.step(st, jax.random.fold_in(key, i))
+            # Fold by the CARRIED global step, not the local scan index:
+            # identical for a fresh run (step == i), but a chunked/resumed
+            # continuation draws fresh streams instead of replaying chunk 0's.
+            st, rec = self.step(st, jax.random.fold_in(key, st.step), params)
             return (st,), rec
         (state,), recs = jax.lax.scan(body, (state,),
                                       jnp.arange(num_steps, dtype=jnp.int32))

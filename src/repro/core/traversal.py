@@ -63,6 +63,12 @@ class FMMConfig:
     # p = 4 expansions under the paper's Fig. 5 bound (0.125%) — larger boxes
     # fall back to the exact direct tier (benchmarks fig5 verifies).
     size_guard: float = 0.5
+    # Static delta used for the trace-time validity guard when `sigma` is a
+    # *traced* scalar (ensemble runs sweeping sigma per replica).  None = use
+    # `delta` itself (the static single-run path).  Ensemble callers set it to
+    # the smallest delta of the sweep so the guard stays conservative for
+    # every replica in the batch (engine.PlasticityEngine._runtime_fmm_cfg).
+    guard_delta: Optional[float] = None
 
     @property
     def delta(self) -> float:
@@ -148,8 +154,10 @@ def descend(structure: OctreeStructure, levels: List[LevelData],
             + jnp.arange(8, dtype=jnp.int32)[None, :]             # (O,8)
 
         # FGT validity: expansions only where the box side is small vs the
-        # kernel scale (resolved at trace time — static per level).
-        valid = structure.box_side(l + 1) <= cfg.size_guard * math.sqrt(cfg.delta)
+        # kernel scale (resolved at trace time — static per level; guard_delta
+        # keeps this static when sigma itself is traced).
+        gd = cfg.guard_delta if cfg.guard_delta is not None else cfg.delta
+        valid = structure.box_side(l + 1) <= cfg.size_guard * math.sqrt(gd)
         log_mass = _tier_log_masses(
             nxt.ax_w[occ], nxt.ax_c[occ], nxt.gc[occ], nxt.moms[occ],
             nxt.den_w[tc], nxt.den_c[tc], nxt.gc[tc], nxt.herm[tc],

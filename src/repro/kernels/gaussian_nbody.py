@@ -30,7 +30,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro import kernels
 
 
 DEFAULT_BT = 256     # target block (grid parallel dim)
@@ -100,7 +100,7 @@ def gaussian_nbody(targets: jnp.ndarray, sources: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bt,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kernels.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(t, s, w)

@@ -26,7 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro import kernels
 
 from repro.core import multi_index as mi
 
@@ -121,7 +121,7 @@ def m2l_separable(moms: jnp.ndarray, herm: jnp.ndarray, y: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((bpad,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kernels.tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(pad2(moms), pad2(herm), y8)

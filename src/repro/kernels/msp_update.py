@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro import kernels
 
 DEFAULT_BN = 2048
 
@@ -70,7 +70,7 @@ def msp_update(x, refrac, calcium, syn_input, uniform, *,
             jax.ShapeDtypeStruct((npad,), x.dtype),
             jax.ShapeDtypeStruct((npad,), calcium.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kernels.tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*args)

@@ -22,7 +22,7 @@ from repro.core.distributed import DistributedPlasticityEngine
 from repro.core.engine import EngineConfig
 from repro.core.msp import MSPConfig
 from repro.core.traversal import FMMConfig
-from repro.launch.dryrun import collective_census
+from repro.launch.dryrun import collective_census, _first
 
 
 def run(n_per_rank: int, ranks: int) -> dict:
@@ -46,8 +46,8 @@ def run(n_per_rank: int, ranks: int) -> dict:
     census = collective_census(compiled.as_text(), body_trips=1)
     return {
         "ranks": ranks, "neurons": n, "octree_depth": eng.structure.depth,
-        "flops": float(cost.get("flops", 0.0)),
-        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "flops": float(_first(cost, "flops")),
+        "bytes": float(_first(cost, "bytes accessed")),
         "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
         "collectives": census,
     }

@@ -22,3 +22,16 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
     devs = np.array(jax.devices()[:data * model]).reshape(data, model)
     return Mesh(devs, ("data", "model"))
+
+
+def make_ensemble_mesh(num_devices: int | None = None,
+                       axis: str = "ensemble") -> Mesh:
+    """1-D mesh for the replica axis of core/ensemble.py (its size must
+    divide the replica count K).
+
+    Replicas never communicate, so any device set works — no pod topology
+    constraints; defaults to every visible device."""
+    devs = jax.devices()
+    if num_devices is not None:
+        devs = devs[:num_devices]
+    return Mesh(np.array(devs), (axis,))

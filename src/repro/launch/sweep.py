@@ -1,0 +1,151 @@
+"""Parameter-sweep driver over the ensemble subsystem.
+
+Builds config grids, packs them into `engine.KernelParams` columns, runs all
+combinations batched in one compiled program (core/ensemble.py), and reduces
+the per-replica `StepRecord` trajectories to summary rows.
+
+Workflow:
+
+    configs = sweep.grid(sigma=[400, 750], inhibitory_fraction=[0.0, 0.2])
+    engine  = PlasticityEngine(positions, msp_cfg, fmm_cfg, engine_cfg)
+    result  = sweep.run_sweep(engine, configs, num_steps=20_000, seed=0)
+    for row in sweep.summarize(result):
+        print(row)
+
+Sweepable knobs are the traced scalars of `KernelParams` — the probability
+kernel scale `sigma`, the Alg. 2 tier thresholds `c1`/`c2`, and the
+beyond-paper `inhibitory_fraction`.  Seed ensembles (same config, different
+RNG) fall out for free: pass `replicates > 1` and each config is repeated
+with distinct per-replica keys.
+
+Note on sigma sweeps: the FGT expansion-validity guard is resolved at trace
+time from the engine's STATIC sigma (see FMMConfig.guard_delta), so construct
+the engine with the smallest sigma of the sweep to keep the guard
+conservative for every replica; `run_sweep` does this check for you and
+warns when the static sigma exceeds the sweep minimum.
+
+    PYTHONPATH=src python -m repro.launch.sweep        # demo grid on CPU
+"""
+from __future__ import annotations
+
+import itertools
+import warnings
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.engine import KernelParams, PlasticityEngine, SimState, StepRecord
+from repro.core.ensemble import EnsembleEngine
+
+SWEEPABLE = ("sigma", "c1", "c2", "inhibitory_fraction")
+
+
+def grid(**axes: Sequence[float]) -> List[Dict[str, float]]:
+    """Cartesian product of named value lists -> list of config dicts.
+
+    Axis names must be in SWEEPABLE; omitted knobs default to the engine's
+    static config at pack time."""
+    unknown = set(axes) - set(SWEEPABLE)
+    if unknown:
+        raise ValueError(f"unknown sweep axes {sorted(unknown)}; "
+                         f"sweepable: {SWEEPABLE}")
+    names = [n for n in SWEEPABLE if n in axes]     # stable, documented order
+    return [dict(zip(names, map(float, vals)))
+            for vals in itertools.product(*(axes[n] for n in names))]
+
+
+def pack_params(engine: PlasticityEngine,
+                configs: Sequence[Dict[str, float]]) -> KernelParams:
+    """(K,)-column KernelParams from config dicts (missing keys = static cfg)."""
+    defaults = {"sigma": engine.fmm_cfg.sigma, "c1": engine.fmm_cfg.c1,
+                "c2": engine.fmm_cfg.c2,
+                "inhibitory_fraction": engine.engine_cfg.inhibitory_fraction}
+    col = lambda name: jnp.asarray(
+        [cfg.get(name, defaults[name]) for cfg in configs], jnp.float32)
+    return KernelParams(sigma=col("sigma"), c1=col("c1"), c2=col("c2"),
+                        inhibitory_fraction=col("inhibitory_fraction"))
+
+
+class SweepResult(NamedTuple):
+    configs: List[Dict[str, float]]   # K config dicts (replicates expanded)
+    states: SimState                  # final (K, ...) states
+    records: StepRecord               # (num_steps, K) trajectories
+    calcium_end: np.ndarray           # (K,) mean calcium over the tail window
+    synapses_end: np.ndarray          # (K,) synapse count at the last step
+    spike_rate: np.ndarray            # (K,) mean spike rate over the tail
+
+
+def run_sweep(engine: PlasticityEngine, configs: Sequence[Dict[str, float]],
+              num_steps: int, seed: int = 0, replicates: int = 1,
+              mesh: Optional[Mesh] = None, tail: int = 500) -> SweepResult:
+    """Run every config (x replicates seeds) batched; reduce trajectories.
+
+    The replica count K = len(configs) * replicates; per-replica keys are
+    split from `seed` so replicate r of config c is an independent stream.
+    """
+    swept_sigmas = [c.get("sigma", engine.fmm_cfg.sigma) for c in configs]
+    if engine.fmm_cfg.sigma > min(swept_sigmas):
+        warnings.warn(
+            "engine's static sigma exceeds the sweep minimum: the expansion "
+            "validity guard may admit boxes too large for the smallest "
+            "sigma's kernel; construct the engine with sigma="
+            f"{min(swept_sigmas)} for a conservative guard.")
+    expanded = [c for c in configs for _ in range(replicates)]
+    k = len(expanded)
+    params = pack_params(engine, expanded)
+    keys = jax.random.split(jax.random.key(seed), k)
+    ens = EnsembleEngine(engine, mesh=mesh)
+    states, recs = ens.simulate(ens.init_states(k), keys, num_steps, params)
+    jax.block_until_ready(recs.calcium_mean)
+
+    t = min(tail, num_steps)
+    ca = np.asarray(recs.calcium_mean)
+    syn = np.asarray(recs.num_synapses)
+    rate = np.asarray(recs.spike_rate)
+    return SweepResult(configs=expanded, states=states, records=recs,
+                       calcium_end=ca[-t:].mean(axis=0),
+                       synapses_end=syn[-1],
+                       spike_rate=rate[-t:].mean(axis=0))
+
+
+def summarize(result: SweepResult) -> List[Dict[str, float]]:
+    """One row per replica: swept knobs + reduced observables."""
+    rows = []
+    for r, cfg in enumerate(result.configs):
+        row = dict(cfg)
+        row.update(replica=r,
+                   calcium_end=float(result.calcium_end[r]),
+                   synapses_end=int(result.synapses_end[r]),
+                   spike_rate=float(result.spike_rate[r]),
+                   dropped=int(result.states.dropped[r]))
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    """CPU demo: a 2x2 sigma x inhibitory_fraction grid at small scale."""
+    from repro.core.engine import EngineConfig
+    from repro.core.msp import MSPConfig
+    from repro.core.traversal import FMMConfig
+
+    rng = np.random.default_rng(0)
+    positions = rng.uniform(0, 1000.0, (300, 3)).astype(np.float32)
+    configs = grid(sigma=[400.0, 750.0], inhibitory_fraction=[0.0, 0.2])
+    engine = PlasticityEngine(
+        positions, MSPConfig.calibrated(speedup=100.0),
+        FMMConfig(c1=8, c2=8, sigma=400.0),       # sweep-min sigma (guard)
+        EngineConfig(method="fmm"))
+    result = run_sweep(engine, configs, num_steps=4000, seed=0)
+    print(f"{'sigma':>7} {'inh_frac':>9} {'calcium':>8} {'synapses':>9} "
+          f"{'rate':>7}")
+    for row in summarize(result):
+        print(f"{row['sigma']:7.0f} {row['inhibitory_fraction']:9.2f} "
+              f"{row['calcium_end']:8.3f} {row['synapses_end']:9d} "
+              f"{row['spike_rate']:7.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,11 +14,23 @@ the dry-run prints every fallback so sharding gaps are visible, not silent).
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:                                        # jax 0.4.x home
+    from jax.experimental.shard_map import shard_map
+except ImportError:                         # moved to jax.shard_map in 0.5+
+    from jax import shard_map
+
+# The "skip the replication check" kwarg was renamed check_rep -> check_vma;
+# resolve it from the signature so callers stay version-agnostic.
+SHARD_MAP_NO_CHECK = {
+    ("check_vma" if "check_vma" in inspect.signature(shard_map).parameters
+     else "check_rep"): False}
 
 PyTree = Any
 
@@ -171,6 +183,20 @@ def cache_spec(mesh: Mesh, path, leaf) -> P:
     if name == "conv":                         # (L, B, W-1, C)
         return _spec(mesh, shape, (None, fsdp, None, "model"))
     return P(*([None] * len(shape)))
+
+
+# -- ensemble replica axis ------------------------------------------------------
+
+def ensemble_spec(tree: PyTree, axis: str = "ensemble", dim: int = 0) -> PyTree:
+    """P with `axis` at position `dim` (None elsewhere) for every leaf.
+
+    The ensemble subsystem (core/ensemble.py) gives every SimState /
+    KernelParams leaf a leading K-replica axis and every StepRecord
+    trajectory a (T, K) layout (dim=1).  Replicas are independent, so
+    sharding this axis is pure data parallelism — shard_map with these specs
+    runs K/devices replicas per device with zero collectives."""
+    s = P(*([None] * dim + [axis]))
+    return jax.tree.map(lambda _: s, tree)
 
 
 # -- whole-state helpers --------------------------------------------------------

@@ -1,0 +1,48 @@
+"""`hypothesis` import indirection with a deterministic fallback.
+
+CI installs the real library via the `test` extra in pyproject.toml and this
+module re-exports it untouched.  On hosts without `hypothesis` the fallback
+below supports exactly the subset these tests use —
+
+    @settings(max_examples=N, deadline=None)
+    @given(st.integers(lo, hi))
+    def test_foo(seed): ...
+
+— by looping the test body over `max_examples` values drawn from a
+deterministic RNG (no shrinking, no example database; property coverage is
+preserved, reproduction of a failure is a fixed seed sequence).
+"""
+try:
+    from hypothesis import given, settings, strategies      # noqa: F401
+except ModuleNotFoundError:
+    import random
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class strategies:                                       # noqa: N801
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    fn(*args, *(s.example(rng) for s in strats), **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -87,8 +87,10 @@ state = TrainState(params=params, opt=adamw.init(params, opt_cfg),
                    step=jnp.zeros((), jnp.int32))
 state_sh = S.state_shardings(mesh2, cfg, opt_cfg)
 state = jax.device_put(state, state_sh)
-step_fn = jax.jit(S.make_train_step(cfg, opt_cfg, remat=False, mesh=mesh2),
-                  in_shardings=(state_sh, None), out_shardings=None)
+# No explicit in_shardings: the state is already committed to state_sh by
+# device_put, and jax 0.4.x mis-resolves a NamedTuple sharding tree passed
+# to jit (P(None) vs the committed P("model") on bias leaves).
+step_fn = jax.jit(S.make_train_step(cfg, opt_cfg, remat=False, mesh=mesh2))
 losses = []
 with mesh2:
     for i in range(6):

@@ -8,7 +8,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import direct, expansions as ex, multi_index as mi
 

@@ -4,7 +4,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import synapses
 
