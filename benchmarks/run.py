@@ -6,6 +6,12 @@ writes the full JSON to bench_results.json.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig1 fig5  # subset
+    PYTHONPATH=src python -m benchmarks.run --quick fig_ensemble fig_sweep2d
+
+--quick shrinks every figure to CI-smoke sizes (minutes on 2 cores): the
+numbers are not publication curves, but the code paths — including the
+multi-device subprocesses — are exercised end to end and the JSON artifact
+is uploaded per PR, so the perf trajectory stays populated.
 """
 from __future__ import annotations
 
@@ -15,9 +21,22 @@ import time
 
 from benchmarks import figures
 
+# CI-smoke sizes per figure (--quick).  Keys match the run() names below.
+QUICK = {
+    "fig1_calcium": dict(steps=2_000, n=200),
+    "fig2_synapses": dict(steps=2_000, n=200),
+    "fig3_strong_scaling": dict(neurons=(1_250, 2_500), reps=1),
+    "fig4_weak_scaling": dict(device_counts=(1, 2), n_per=128),
+    "fig5_expansion_error": dict(num_boxes=80),
+    "fig_ensemble": dict(n=48, k=8, steps=400, reps=1),
+    "fig_sweep2d": dict(ensemble=2, data=2, n=128, k=2, steps=300),
+}
+
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    args = sys.argv[1:]
+    quick = "--quick" in args
+    want = set(a for a in args if not a.startswith("-"))
     results = {}
     rows = []
 
@@ -25,7 +44,7 @@ def main() -> None:
         if want and not any(name.startswith(w) for w in want):
             return
         t0 = time.perf_counter()
-        res = fn()
+        res = fn(**QUICK.get(name, {})) if quick else fn()
         dt = time.perf_counter() - t0
         results[name] = res
         rows.append(f"{name},{dt * 1e6:.0f},{derived_fn(res)}")
@@ -51,9 +70,30 @@ def main() -> None:
         lambda r: f"speedup={r['speedup']:.2f};"
                   f"batched_rps={r['batched_replicas_per_s']:.2f};"
                   f"sequential_rps={r['sequential_replicas_per_s']:.2f}")
+    run("fig_sweep2d", figures.fig_sweep2d,
+        lambda r: r.get("error", "")[:60] or
+                  f"mesh_rps={r['mesh_replicas_per_s']:.2f};"
+                  f"seq_rps={r['sequential_replicas_per_s']:.2f};"
+                  f"bitwise={r['bitwise_match']}")
 
     with open("bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
+
+    # Subprocess-backed figures report crashes as {"error": ...} instead of
+    # raising (so one bad leg doesn't lose the others' results) — surface
+    # them as a nonzero exit so the CI bench-smoke job fails loudly.
+    def errors(node, path):
+        if isinstance(node, dict):
+            for key, val in node.items():
+                if key == "error":
+                    yield path, val
+                yield from errors(val, f"{path}.{key}")
+
+    failed = list(errors(results, ""))
+    for path, msg in failed:
+        print(f"BENCH ERROR at {path}: {str(msg)[:300]}", file=sys.stderr)
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -11,7 +11,6 @@ multi-device execution via the distributed engine.
       PYTHONPATH=src python examples/brain_sim.py --devices 4
 """
 import argparse
-import os
 import time
 
 import numpy as np

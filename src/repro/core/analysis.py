@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Dict
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.synapses import SynapseState, in_degree, out_degree

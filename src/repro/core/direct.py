@@ -12,7 +12,6 @@ is pure jnp and intentionally simple.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -2,40 +2,59 @@
 
 Mapping (see DESIGN.md §2 for the full assumption log):
 
-  MPI rank            -> device along the mesh's neuron axis ("data", and
-                         "pod" when multi-pod)
+  MPI rank            -> device along the mesh's neuron axis ("data")
   rank owns subtrees  -> device owns a contiguous Morton-sorted neuron slice
-  branch exchange     -> psum of per-device partial octree aggregates
-                         (all-reduce of the level pyramids; empty boxes
-                         contribute zeros, so partial sums are exact)
+  branch exchange     -> psum of per-device partial octree aggregates; each
+                         BOX is aggregated wholly by one owner device (the
+                         one holding its first member), so every partial is
+                         either the box's full sum or exact zeros and the
+                         merge is bitwise identical to a single-device build
   lazy remote fetch   -> replicated shared pyramid (prefetch-everything);
                          the hierarchical request-routed variant for 1000+
                          nodes is described in DESIGN.md §4
-  request exchange    -> all_gather of (partner, count) + deterministic
-                         replicated conflict resolution (bitwise identical on
-                         every device, so no answer round-trip is needed)
+  request exchange    -> all_gather of the edge table + deterministic
+                         replicated conflict resolution and insertion
+                         (bitwise identical on every device, so no
+                         answer round-trip is needed)
 
-Per activity step only ONE collective runs: a psum of the (n,) synaptic-input
-partial sums (edges live on the axon-owner device).  The connectivity update
-(every 100 steps) runs the pyramid psum + request all_gather — the analogue of
-the paper's O(n/p + p) phase.
+Per activity step: one bool all_gather shares the previous step's spike
+vector (edge slots are sharded by SLOT RANGE — the replicated insert places
+an edge's unit anywhere in the global table, so the axon may live on another
+device), one psum merges the (n,) synaptic-input partial sums, and one
+all_gather assembles the global calcium/spike vectors for the StepRecord
+observables.  The connectivity update (every 100 steps) runs the pyramid
+psum + edge-table all_gather — the analogue of the paper's O(n/p + p) phase.
+
+Reproducibility contract: every collective is exact (integer-valued partial
+sums, box-ownership pyramid partials, replicated synapse updates) and the
+spike uniforms are drawn GLOBALLY and sliced per device, so a simulation is
+bitwise invariant to the shard count — `DistributedPlasticityEngine` and the
+2-D `DistributedEnsembleEngine` reproduce `PlasticityEngine.simulate`
+exactly on synapse counts AND float step records (tests/test_sweep2d.py).
+
+The per-device step is factored into `local_step`, which composes under
+`jax.vmap`: `DistributedEnsembleEngine` maps it over a replica axis to run
+K-member parameter sweeps on a 2-D ("ensemble", "data") mesh — replicas
+exchange zero collectives among themselves, all psums/all_gathers are scoped
+to the data axis (launch/mesh.make_sweep_mesh, sharding/rules 2-D specs).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.sharding import rules
 from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
 
 from repro.core import barnes_hut, msp, octree, synapses, traversal
-from repro.core.engine import (EngineConfig, PlasticityEngine, SimState,
-                               StepRecord)
+from repro.core.engine import (EngineConfig, KernelParams, PlasticityEngine,
+                               SimState, StepRecord)
+from repro.core.ensemble import scan_replicas
 from repro.core.msp import MSPConfig
 from repro.core.traversal import FMMConfig
 
@@ -57,11 +76,31 @@ class DistributedPlasticityEngine(PlasticityEngine):
         self.num_shards = mesh.shape[axis]
         if positions.shape[0] % self.num_shards:
             raise ValueError("n must divide the neuron axis size")
+        if engine_cfg.method not in ("fmm", "barnes_hut"):
+            # fail fast instead of silently substituting another search and
+            # voiding the bitwise single-device parity contract
+            raise ValueError(
+                f"distributed engine supports methods 'fmm'/'barnes_hut', "
+                f"got {engine_cfg.method!r}")
         # Pre-sort by Morton code -> contiguous subtree ownership.
         tmp = octree.build_structure(positions, engine_cfg.domain,
                                      engine_cfg.depth)
         positions = positions[tmp.order]
         super().__init__(positions, msp_cfg, fmm_cfg, engine_cfg)
+        # Box ownership per level: a box belongs to the device holding its
+        # FIRST member (neurons are Morton-sorted, so box members are
+        # contiguous).  The owner aggregates the box from the replicated
+        # global vacancy vectors in global member order; everyone else
+        # contributes exact zeros, which makes the branch-exchange psum
+        # bitwise identical to the single-device pyramid.
+        n_local = self.n // self.num_shards
+        self._box_owner: List[np.ndarray] = []
+        for level in range(self.structure.depth + 1):
+            ids = self.structure.box_of(level)          # nondecreasing
+            first = np.r_[True, ids[1:] != ids[:-1]]
+            first_idx = np.maximum.accumulate(
+                np.where(first, np.arange(self.n), 0))
+            self._box_owner.append((first_idx // n_local).astype(np.int32))
 
     # -- sharded state ------------------------------------------------------
     def _specs(self) -> Tuple[SimState, StepRecord]:
@@ -74,139 +113,243 @@ class DistributedPlasticityEngine(PlasticityEngine):
         return state_spec, rec_spec
 
     # -- local-shard phases ---------------------------------------------------
-    def _local_pyramid(self, lo: jnp.ndarray, positions_local, ax_vac, den_vac):
-        """Per-device partial pyramid from local neurons + psum merge.
+    def _local_pyramid(self, ax_vac_g: jnp.ndarray, den_vac_g: jnp.ndarray,
+                       fmm_cfg: Optional[FMMConfig] = None):
+        """Partial pyramid from owned boxes + psum merge (branch exchange).
 
-        Every LevelData field is a weighted segment-sum about *static* box
-        centers (see octree.build_level), so the cross-device merge — the
-        paper's branch exchange — is an exact psum of raw sums; centroids are
-        renormalised after the merge.
+        ax_vac_g/den_vac_g are the replicated GLOBAL vacancy vectors (the
+        update already all_gathers them for the descent); each device masks
+        them to the boxes it owns, so the psum adds one full-precision sum
+        and p-1 exact zeros per box — bitwise equal to octree.build_pyramid
+        on a single device, for any shard count.
         """
-        n_local = positions_local.shape[0]
+        cfg = self.fmm_cfg if fmm_cfg is None else fmm_cfg
+        rank = jax.lax.axis_index(self.axis)
         levels = []
-        for l in range(self.structure.depth + 1):
-            full_ids = jnp.asarray(self.structure.box_of(l))
-            ids = jax.lax.dynamic_slice_in_dim(full_ids, lo, n_local)
-            centers = jnp.asarray(self.structure.centers_at(l))
-            lvl = octree.build_level(ids, self.structure.boxes_at(l), centers,
-                                     positions_local, ax_vac, den_vac,
-                                     self.fmm_cfg.delta, self.fmm_cfg.p)
-            den_pos = lvl.den_c * lvl.den_w[:, None]
-            ax_pos = lvl.ax_c * lvl.ax_w[:, None]
-            den_w = jax.lax.psum(lvl.den_w, self.axis)
-            ax_w = jax.lax.psum(lvl.ax_w, self.axis)
-            den_c = jax.lax.psum(den_pos, self.axis) / jnp.maximum(den_w, 1e-30)[:, None]
-            ax_c = jax.lax.psum(ax_pos, self.axis) / jnp.maximum(ax_w, 1e-30)[:, None]
-            levels.append(octree.LevelData(
-                den_w=den_w, ax_w=ax_w, den_c=den_c, ax_c=ax_c, gc=centers,
-                herm=jax.lax.psum(lvl.herm, self.axis),
-                moms=jax.lax.psum(lvl.moms, self.axis)))
+        for level in range(self.structure.depth + 1):
+            ids = jnp.asarray(self.structure.box_of(level))
+            centers = jnp.asarray(self.structure.centers_at(level))
+            mine = (jnp.asarray(self._box_owner[level]) == rank
+                    ).astype(jnp.float32)
+            raw = octree.build_level_raw(
+                ids, self.structure.boxes_at(level), centers, self.positions,
+                ax_vac_g * mine, den_vac_g * mine, cfg.delta, cfg.p)
+            merged = tuple(jax.lax.psum(x, self.axis) for x in raw)
+            levels.append(octree.finalize_level(centers, merged, cfg.p))
         return levels
+
+    def local_step(self, state: SimState, key: jax.Array,
+                   do_update: Optional[jax.Array] = None,
+                   params: Optional[KernelParams] = None
+                   ) -> Tuple[SimState, StepRecord]:
+        """One per-device step on local shards; collectives name `self.axis`.
+
+        Mirrors `PlasticityEngine.step` bitwise (same key splits, globally
+        drawn spike uniforms, replicated synapse update).  Composes under
+        `jax.vmap` over a replica axis: pass `do_update` from the UNBATCHED
+        scan counter (see core/ensemble.py) so the connectivity update stays
+        a `lax.cond`, and per-replica `params` for swept kernel knobs.
+        """
+        axis, n = self.axis, self.n
+        n_local = n // self.num_shards
+        rank = jax.lax.axis_index(axis)
+        lo = rank * n_local
+        kact, kconn = jax.random.split(key)
+
+        # --- phases 1+2: activity (exact collectives: bool gather + integer
+        # psum) --- Edge slots are sharded by SLOT RANGE, not by axon owner
+        # (the replicated insert fills global free slots, so an edge's axon
+        # may live on another device): gather the global previous-step spike
+        # vector and count every locally held slot exactly once.
+        sign = self._runtime_sign(params)
+        spiked_g = jax.lax.all_gather(state.neurons.spiked, axis, tiled=True)
+        contrib = (state.edges.valid
+                   & spiked_g[state.edges.src]).astype(jnp.float32)
+        if sign is not None:
+            contrib = contrib * sign[state.edges.src]
+        partial_in = jax.ops.segment_sum(contrib, state.edges.dst,
+                                         num_segments=n)
+        syn_in = jax.lax.dynamic_slice_in_dim(
+            jax.lax.psum(partial_in, axis), lo, n_local)
+        # Global draw + slice: bitwise invariant to the shard count.
+        u = jax.lax.dynamic_slice_in_dim(
+            jax.random.uniform(kact, (n,), jnp.float32), lo, n_local)
+        neurons = msp.step_neurons(state.neurons, syn_in, kact, self.msp_cfg,
+                                   u=u)
+        state = state._replace(neurons=neurons, step=state.step + 1)
+
+        def conn_update(state: SimState) -> SimState:
+            kdel, kfind, kconf = jax.random.split(kconn, 3)
+            gather = lambda x: jax.lax.all_gather(x, axis, tiled=True)
+            # Request exchange: assemble the global edge table + element
+            # counts, then run the whole synapse update REPLICATED — every
+            # device computes the identical new table and commits its slice,
+            # so no answer round-trip (or free-slot reconciliation) is needed.
+            edges_g = synapses.SynapseState(*(gather(x) for x in state.edges))
+            ax_el_g = gather(state.neurons.ax_elems)
+            den_el_g = gather(state.neurons.den_elems)
+            edges_g = synapses.delete_excess(edges_g, ax_el_g, den_el_g, kdel)
+            out_deg = synapses.out_degree(edges_g, n)
+            in_deg = synapses.in_degree(edges_g, n)
+            ax_vac = jnp.maximum(jnp.floor(ax_el_g).astype(jnp.int32)
+                                 - out_deg, 0).astype(jnp.float32)
+            den_vac = jnp.maximum(jnp.floor(den_el_g).astype(jnp.int32)
+                                  - in_deg, 0).astype(jnp.float32)
+
+            fmm_cfg = self._runtime_fmm_cfg(params)
+            levels = self._local_pyramid(ax_vac, den_vac, fmm_cfg)
+            if self.engine_cfg.method == "fmm":
+                partner = traversal.find_partners(
+                    self.structure, levels, self.positions, ax_vac, den_vac,
+                    kfind, fmm_cfg)
+            else:
+                partner = barnes_hut.find_partners_bh(
+                    self.structure, levels, self.positions, ax_vac, den_vac,
+                    kfind, fmm_cfg)
+
+            req = jnp.minimum(ax_vac.astype(jnp.int32),
+                              self.engine_cfg.max_requests_per_neuron)
+            req = jnp.where(partner >= 0, req, 0)
+            accepted = synapses.resolve_conflicts(
+                partner, req, den_vac.astype(jnp.int32), kconf)
+            new_edges_g, dropped = synapses.insert(
+                edges_g, partner, accepted,
+                self.engine_cfg.max_requests_per_neuron)
+            e_local = new_edges_g.src.shape[0] // self.num_shards
+            edges_l = synapses.SynapseState(
+                *(jax.lax.dynamic_slice_in_dim(x, rank * e_local, e_local)
+                  for x in new_edges_g))
+            return state._replace(edges=edges_l,
+                                  dropped=state.dropped + dropped)
+
+        if do_update is None:
+            do_update = (state.step % self.msp_cfg.update_interval) == 0
+        state = jax.lax.cond(do_update, conn_update, lambda s: s, state)
+
+        # Observables: gather the global vectors and reduce them exactly as
+        # the single-device engine does (integer psum for the synapse count).
+        ca_g = jax.lax.all_gather(neurons.calcium, axis, tiled=True)
+        spk_g = jax.lax.all_gather(neurons.spiked, axis, tiled=True)
+        nsyn = jax.lax.psum(jnp.sum(state.edges.valid.astype(jnp.int32)), axis)
+        rec = StepRecord(
+            calcium_mean=jnp.mean(ca_g), calcium_std=jnp.std(ca_g),
+            num_synapses=nsyn,
+            spike_rate=jnp.mean(spk_g.astype(jnp.float32)))
+        return state, rec
 
     def make_sharded_step(self):
         """Returns a jitted sharded step: (state, key) -> (state, record)."""
-        struct = self.structure
-        n, axis, nshards = self.n, self.axis, self.num_shards
-        n_local = n // nshards
-        cfg, fcfg, ecfg = self.msp_cfg, self.fmm_cfg, self.engine_cfg
-        positions_g = self.positions           # replicated (static)
-
-        def local_step(state: SimState, key: jax.Array):
-            rank = jax.lax.axis_index(axis)
-            lo = rank * n_local
-            pos_local = jax.lax.dynamic_slice_in_dim(positions_g, lo, n_local)
-
-            # --- phase 1+2: activity (one psum for synaptic input) ---
-            partial_in = jax.ops.segment_sum(
-                (state.edges.valid & state.neurons.spiked[
-                    jnp.clip(state.edges.src - lo, 0, n_local - 1)]
-                 & (state.edges.src >= lo)
-                 & (state.edges.src < lo + n_local)).astype(jnp.float32),
-                state.edges.dst, num_segments=n)
-            syn_in_g = jax.lax.psum(partial_in, axis)
-            syn_in = jax.lax.dynamic_slice_in_dim(syn_in_g, lo, n_local)
-            kact = jax.random.fold_in(key, 1)
-            neurons = msp.step_neurons(state.neurons, syn_in, kact, cfg)
-            state = state._replace(neurons=neurons, step=state.step + 1)
-
-            def conn_update(state: SimState) -> SimState:
-                kdel, kfind, kconf = jax.random.split(jax.random.fold_in(key, 2), 3)
-                # Deletion needs global edge view for the dst side: gather.
-                edges_g = synapses.SynapseState(
-                    *(jax.lax.all_gather(x, axis, tiled=True)
-                      for x in state.edges))
-                elems_g = tuple(jax.lax.all_gather(x, axis, tiled=True)
-                                for x in (neurons.ax_elems, neurons.den_elems))
-                edges_g = synapses.delete_excess(edges_g, *elems_g, kdel)
-                out_deg = synapses.out_degree(edges_g, n)
-                in_deg = synapses.in_degree(edges_g, n)
-                ax_vac_g = jnp.maximum(jnp.floor(elems_g[0]).astype(jnp.int32)
-                                       - out_deg, 0).astype(jnp.float32)
-                den_vac_g = jnp.maximum(jnp.floor(elems_g[1]).astype(jnp.int32)
-                                        - in_deg, 0).astype(jnp.float32)
-
-                ax_vac_l = jax.lax.dynamic_slice_in_dim(ax_vac_g, lo, n_local)
-                den_vac_l = jax.lax.dynamic_slice_in_dim(den_vac_g, lo, n_local)
-                levels = self._local_pyramid(lo, pos_local, ax_vac_l, den_vac_l)
-
-                if ecfg.method == "fmm":
-                    partner = traversal.find_partners(
-                        struct, levels, positions_g, ax_vac_g, den_vac_g,
-                        kfind, fcfg)
-                else:
-                    partner = barnes_hut.find_partners_bh(
-                        struct, levels, positions_g, ax_vac_g, den_vac_g,
-                        kfind, fcfg)
-
-                req = jnp.minimum(ax_vac_g.astype(jnp.int32),
-                                  ecfg.max_requests_per_neuron)
-                req = jnp.where(partner >= 0, req, 0)
-                accepted = synapses.resolve_conflicts(
-                    partner, req, den_vac_g.astype(jnp.int32), kconf)
-                # Each device commits only its local axons' edges.
-                acc_l = jax.lax.dynamic_slice_in_dim(accepted, lo, n_local)
-                part_l = jax.lax.dynamic_slice_in_dim(partner, lo, n_local)
-                local_edges = synapses.SynapseState(
-                    *(jax.lax.dynamic_slice_in_dim(x, rank * (x.shape[0] // nshards),
-                                                   x.shape[0] // nshards)
-                      for x in edges_g))
-                # Re-express local src ids in global terms (already global).
-                new_edges, dropped = synapses.insert(
-                    local_edges,
-                    jnp.where(part_l >= 0, part_l, -1),
-                    acc_l, ecfg.max_requests_per_neuron)
-                # insert() writes unit src ids 0..n_local-1; shift to global.
-                shift = (new_edges.valid & ~local_edges.valid)
-                fixed_src = jnp.where(shift, new_edges.src + lo, new_edges.src)
-                new_edges = new_edges._replace(src=fixed_src)
-                return state._replace(edges=new_edges,
-                                      dropped=state.dropped + dropped)
-
-            do_update = (state.step % cfg.update_interval) == 0
-            state = jax.lax.cond(do_update, conn_update, lambda s: s, state)
-
-            ca_sum = jax.lax.psum(jnp.sum(neurons.calcium), axis)
-            ca2_sum = jax.lax.psum(jnp.sum(neurons.calcium ** 2), axis)
-            mean = ca_sum / n
-            std = jnp.sqrt(jnp.maximum(ca2_sum / n - mean ** 2, 0.0))
-            nsyn = jax.lax.psum(jnp.sum(state.edges.valid.astype(jnp.int32)), axis)
-            rate = jax.lax.psum(jnp.sum(neurons.spiked.astype(jnp.float32)), axis) / n
-            rec = StepRecord(mean, std, nsyn, rate)
-            return state, rec
-
         state_spec, rec_spec = self._specs()
-        sharded = shard_map(local_step, mesh=self.mesh,
-                            in_specs=(state_spec, P()),
+        sharded = shard_map(lambda s, k: self.local_step(s, k),
+                            mesh=self.mesh, in_specs=(state_spec, P()),
                             out_specs=(state_spec, rec_spec),
                             **SHARD_MAP_NO_CHECK)
         return jax.jit(sharded)
 
     @functools.partial(jax.jit, static_argnums=(0, 3))
-    def simulate(self, state: SimState, key: jax.Array, num_steps: int):
-        step = self.make_sharded_step()
+    def simulate(self, state: SimState, key: jax.Array, num_steps: int,
+                 params: Optional[KernelParams] = None
+                 ) -> Tuple[SimState, StepRecord]:
+        state_spec, rec_spec = self._specs()
+        param_spec = jax.tree.map(lambda _: P(), params)
 
-        def body(st, i):
-            st, rec = step(st, jax.random.fold_in(key, i))
-            return st, rec
-        return jax.lax.scan(body, state,
-                            jnp.arange(num_steps, dtype=jnp.int32))
+        def local_sim(st, k, pr):
+            def body(carry, i):
+                s, = carry
+                # Fold by the CARRIED global step (see engine.simulate).
+                s, rec = self.local_step(s, jax.random.fold_in(k, s.step),
+                                         params=pr)
+                return (s,), rec
+            (st,), recs = jax.lax.scan(body, (st,),
+                                       jnp.arange(num_steps, dtype=jnp.int32))
+            return st, recs
+
+        sharded = shard_map(local_sim, mesh=self.mesh,
+                            in_specs=(state_spec, P(), param_spec),
+                            out_specs=(state_spec, rec_spec),
+                            **SHARD_MAP_NO_CHECK)
+        return sharded(state, key, params)
+
+
+class DistributedEnsembleEngine:
+    """K replica simulations x data-sharded neurons on one 2-D mesh.
+
+    The two decompositions compose orthogonally (the CORTEX-style two-level
+    layout: replicas x subdomains):
+
+      * the replica axis is pure data parallelism, exactly as in
+        core/ensemble.EnsembleEngine — replicas never communicate;
+      * within each replica, neurons/edges are decomposed over the data axis
+        as in `DistributedPlasticityEngine`, whose `local_step` names ONLY
+        the data axis in its psum/all_gather collectives, so `jax.vmap` over
+        the replica axis batches them without widening their scope.
+
+    The per-step update predicate comes from the unbatched scan counter
+    (shared with EnsembleEngine via `scan_replicas`), keeping the
+    connectivity update a genuine `lax.cond` under vmap.
+
+    engine: a `DistributedPlasticityEngine` built on a mesh that ALSO has
+            `ensemble_axis` (launch/mesh.make_sweep_mesh).  The ensemble
+            axis size must divide the replica count K
+            (K % mesh.shape[ensemble_axis] == 0).
+    """
+
+    def __init__(self, engine: DistributedPlasticityEngine,
+                 ensemble_axis: str = "ensemble"):
+        self.engine = engine
+        self.mesh = engine.mesh
+        self.ensemble_axis = ensemble_axis
+        if ensemble_axis not in self.mesh.shape:
+            raise ValueError(
+                f"mesh has no {ensemble_axis!r} axis: {dict(self.mesh.shape)}")
+        if engine.axis == ensemble_axis:
+            raise ValueError("ensemble and data axes must differ")
+
+    # -- batched state ------------------------------------------------------
+    def init_states(self, num_replicas: int) -> SimState:
+        """Fresh (K, ...)-leading state for every replica."""
+        base = self.engine.init_state()
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_replicas,) + x.shape), base)
+
+    def default_params(self, num_replicas: int) -> KernelParams:
+        """(K,) params equal to the engine's static configs (identity sweep)."""
+        base = KernelParams.from_configs(self.engine.fmm_cfg,
+                                         self.engine.engine_cfg)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_replicas,) + x.shape), base)
+
+    # -- batched + sharded simulation ---------------------------------------
+    @functools.partial(jax.jit, static_argnums=(0, 3))
+    def simulate(self, states: SimState, keys: jax.Array, num_steps: int,
+                 params: Optional[KernelParams] = None
+                 ) -> Tuple[SimState, StepRecord]:
+        """Run all replicas `num_steps` steps on the 2-D mesh.
+
+        states: (K, ...)-leading SimState (init_states).
+        keys:   (K,) typed PRNG key array — one independent stream per replica.
+        params: optional (K,)-leading KernelParams (launch/sweep.pack_params).
+        Returns (final states, StepRecord with (num_steps, K) trajectories).
+        """
+        eng = self.engine
+        k = states.step.shape[0]
+        k_shards = self.mesh.shape[self.ensemble_axis]
+        if k % k_shards:
+            raise ValueError(
+                f"the {self.ensemble_axis!r} axis size {k_shards} must "
+                f"divide the replica count {k}")
+        state_spec = rules.ensemble_sharded_spec(states, self.ensemble_axis,
+                                                 eng.axis)
+        param_spec = rules.ensemble_spec(params, self.ensemble_axis)
+        rec_spec = StepRecord(*(P(None, self.ensemble_axis),)
+                              * len(StepRecord._fields))
+        step_fn = lambda s, key, pr, upd: eng.local_step(
+            s, key, do_update=upd, params=pr)
+        sharded = shard_map(
+            lambda st, ks, pr: scan_replicas(
+                step_fn, st, ks, pr, num_steps, eng.msp_cfg.update_interval),
+            mesh=self.mesh,
+            in_specs=(state_spec, P(self.ensemble_axis), param_spec),
+            out_specs=(state_spec, rec_spec),
+            **SHARD_MAP_NO_CHECK)
+        return sharded(states, keys, params)

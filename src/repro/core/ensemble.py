@@ -45,6 +45,41 @@ from repro.sharding import rules
 from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
 
 
+def scan_replicas(step_fn, states: SimState, keys: jax.Array,
+                  params: Optional[KernelParams], num_steps: int,
+                  interval: int):
+    """The K-replica scan shared by EnsembleEngine (replica axis only) and
+    distributed.DistributedEnsembleEngine (replica axis x data axis).
+
+    step_fn(state, key, params, do_update) -> (state, record) is vmapped over
+    the leading replica axis of (states, keys, params).  Two scheduling
+    details keep the batched program as cheap as sequential ones:
+
+      * per-replica RNG keys fold by the CARRIED global step (see
+        engine.simulate): bitwise the same as folding by the scan index for
+        fresh runs, fresh streams for chunked continuations;
+      * the connectivity-update predicate is computed from the UNBATCHED
+        carried counter — replicas step in lockstep, so replica 0's counter
+        stands for all, and an unbatched predicate keeps the update a
+        `lax.cond` under vmap (a batched one would lower to a select that
+        runs the expensive branch every step).  Sequential step checks
+        state.step AFTER the increment; st.step[0] + 1 matches that for any
+        starting step (chunked/resumed simulate calls included).
+    """
+    def body(st, i):
+        ki = jax.vmap(lambda k: jax.random.fold_in(k, st.step[0]))(keys)
+        do_upd = ((st.step[0] + 1) % interval) == 0
+        if params is None:
+            st, rec = jax.vmap(lambda s, k: step_fn(s, k, None, do_upd))(
+                st, ki)
+        else:
+            st, rec = jax.vmap(lambda s, k, p: step_fn(s, k, p, do_upd))(
+                st, ki, params)
+        return st, rec
+
+    return jax.lax.scan(body, states, jnp.arange(num_steps, dtype=jnp.int32))
+
+
 class EnsembleEngine:
     """Runs K replicas of one `PlasticityEngine` as a single batched program.
 
@@ -80,28 +115,10 @@ class EnsembleEngine:
     # -- batched simulation --------------------------------------------------
     def _sim(self, states: SimState, keys: jax.Array,
              params: Optional[KernelParams], num_steps: int):
-        interval = self.engine.msp_cfg.update_interval
-
-        def body(st, i):
-            # Fold by the carried global step (see engine.simulate): bitwise
-            # the same as folding by i for fresh runs, fresh streams for
-            # chunked continuations.
-            ki = jax.vmap(lambda k: jax.random.fold_in(k, st.step[0]))(keys)
-            # Unbatched predicate: the counter is lockstep across replicas,
-            # so replica 0's step stands for all — and staying unbatched
-            # keeps the update a lax.cond under vmap.  Sequential step checks
-            # state.step AFTER the increment; st.step[0] + 1 matches that for
-            # any starting step (chunked/resumed simulate calls included).
-            do_upd = ((st.step[0] + 1) % interval) == 0
-            step = lambda s, k, p: self.engine.step(s, k, p, do_update=do_upd)
-            if params is None:
-                st, rec = jax.vmap(lambda s, k: step(s, k, None))(st, ki)
-            else:
-                st, rec = jax.vmap(step)(st, ki, params)
-            return st, rec
-
-        return jax.lax.scan(body, states,
-                            jnp.arange(num_steps, dtype=jnp.int32))
+        step_fn = lambda s, k, p, upd: self.engine.step(s, k, p,
+                                                        do_update=upd)
+        return scan_replicas(step_fn, states, keys, params, num_steps,
+                             self.engine.msp_cfg.update_interval)
 
     @functools.partial(jax.jit, static_argnums=(0, 3))
     def simulate(self, states: SimState, keys: jax.Array, num_steps: int,

@@ -32,7 +32,6 @@ M2L: given A_alpha about sC, the Taylor coefficients about tC are
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import multi_index as mi

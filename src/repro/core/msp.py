@@ -94,17 +94,24 @@ def growth_curve(calcium: jnp.ndarray, eta: float, cfg: MSPConfig) -> jnp.ndarra
 
 
 def step_neurons(state: NeuronState, syn_input: jnp.ndarray,
-                 key: jax.Array, cfg: MSPConfig) -> NeuronState:
+                 key: jax.Array, cfg: MSPConfig,
+                 u: jnp.ndarray | None = None) -> NeuronState:
     """Phases 1 + 2 for one simulation step.
 
     syn_input: (n,) SIGNED count of presynaptic partners that spiked last
     step (excitatory +1, inhibitory -1; the paper's experiments use
     excitatory-only networks — inhibitory populations are a beyond-paper
     extension, see engine.EngineConfig.inhibitory_fraction).
+    u: optional pre-drawn (n,) spike uniforms.  The distributed engine draws
+    the GLOBAL (n_total,) uniforms from the shared key and passes each
+    device its slice, so spiking is bitwise invariant to the shard count
+    (drawing (n_local,) per device from the shared key would give every
+    device the SAME stream and none of them the single-device one).
     """
     x = state.x + (cfg.x0 - state.x) / cfg.tau_x \
         + cfg.background + cfg.w_syn * syn_input
-    u = jax.random.uniform(key, x.shape, x.dtype)
+    if u is None:
+        u = jax.random.uniform(key, x.shape, x.dtype)
     spiked = (u < x) & (state.refrac <= 0)
     refrac = jnp.where(spiked, cfg.refractory,
                        jnp.maximum(state.refrac - 1, 0))

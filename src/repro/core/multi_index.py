@@ -18,7 +18,6 @@ from __future__ import annotations
 import functools
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 # Paper cut-off: alpha = beta = (3,3,3)  ->  p = 4 terms per dimension.

@@ -27,6 +27,7 @@ from typing import List, Optional
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax import custom_batching
 
 from repro.core import expansions as ex
 from repro.core import multi_index as mi
@@ -145,6 +146,19 @@ def build_structure(positions: np.ndarray, domain: float,
 # Per-update dynamic data (jittable)
 # ---------------------------------------------------------------------------
 
+@custom_batching.custom_vmap
+def _pin(v: jnp.ndarray) -> jnp.ndarray:
+    """optimization_barrier with a vmap rule (jax 0.4.x has none built in):
+    the ensemble path vmaps the distributed step over replicas, and the
+    barrier must survive batching for the level build to stay fusion-stable."""
+    return jax.lax.optimization_barrier(v)
+
+
+@_pin.def_vmap
+def _pin_vmap(axis_size, in_batched, v):
+    return jax.lax.optimization_barrier(v), in_batched[0]
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LevelData:
@@ -174,6 +188,56 @@ class LevelData:
         return cls(*children)
 
 
+def build_level_raw(box_ids: jnp.ndarray, num_boxes: int, centers: jnp.ndarray,
+                    positions: jnp.ndarray, ax_vac: jnp.ndarray,
+                    den_vac: jnp.ndarray, delta: float,
+                    p: int = DEFAULT_ORDER):
+    """The raw per-box sums of one level (before any normalisation).
+
+    Every field is a plain (possibly weighted) segment-sum over neurons, so a
+    device holding a subset of the weights produces an exact partial that
+    merges by ADDITION — the paper's branch-node exchange.  The distributed
+    engine psums exactly these raw sums and then applies `finalize_level`,
+    the same normalisation `build_level` applies locally; with box-ownership
+    partials (each box's weights wholly on one device, zeros elsewhere) the
+    merged pyramid is bitwise identical to the single-device build.
+
+    Returns (den_w, ax_w, den_pos, ax_pos, herm_raw, moms).
+    """
+    seg = lambda vals: jax.ops.segment_sum(vals, box_ids, num_segments=num_boxes)
+    # The optimization_barrier pins the weighted payloads as materialised
+    # values so the scatter-add consumes identically rounded update rows in
+    # EVERY surrounding program.  Without it XLA is free to fuse (and
+    # contract) the multiply into the scatter differently per program, which
+    # would silently void the distributed engine's bitwise
+    # device-count-invariance contract — this function runs inside shard_map
+    # there and in a plain jit on one device, and both must round alike.
+    den_w = seg(den_vac)
+    ax_w = seg(ax_vac)
+    den_pos = seg(_pin(den_vac[:, None] * positions))
+    ax_pos = seg(_pin(ax_vac[:, None] * positions))
+
+    scaled = (positions - centers[box_ids]) / jnp.sqrt(delta)
+    feats = mi.monomials(scaled, p)                       # (n, k)
+    # A_alpha(B) = 1/alpha! sum_{j in B} den_j ((s_j - gc_B)/sqrt(delta))^alpha
+    # (the 1/alpha! is applied in finalize_level, AFTER any cross-device merge)
+    herm_raw = seg(_pin(den_vac[:, None] * feats))
+    # M_beta(B) = sum_{i in B} ax_i ((t_i - gc_B)/sqrt(delta))^beta
+    moms = seg(_pin(ax_vac[:, None] * feats))
+    return den_w, ax_w, den_pos, ax_pos, herm_raw, moms
+
+
+def finalize_level(centers: jnp.ndarray, raw, p: int = DEFAULT_ORDER
+                   ) -> LevelData:
+    """Normalise raw level sums (centroid divisions, 1/alpha!) -> LevelData."""
+    den_w, ax_w, den_pos, ax_pos, herm_raw, moms = raw
+    den_c = den_pos / jnp.maximum(den_w, 1e-30)[:, None]
+    ax_c = ax_pos / jnp.maximum(ax_w, 1e-30)[:, None]
+    herm = herm_raw / jnp.asarray(mi.multi_factorial(p), herm_raw.dtype)
+    return LevelData(den_w=den_w, ax_w=ax_w, den_c=den_c, ax_c=ax_c,
+                     gc=centers, herm=herm, moms=moms)
+
+
 def build_level(box_ids: jnp.ndarray, num_boxes: int, centers: jnp.ndarray,
                 positions: jnp.ndarray, ax_vac: jnp.ndarray,
                 den_vac: jnp.ndarray, delta: float,
@@ -183,29 +247,9 @@ def build_level(box_ids: jnp.ndarray, num_boxes: int, centers: jnp.ndarray,
     box_ids: (n,) static int32 box id per neuron at this level.
     centers: (num_boxes, 3) static geometric centers.
     ax_vac/den_vac: (n,) float vacant element counts.
-
-    Every field is a plain (possibly weighted) segment-sum over neurons, so a
-    device holding a subset of neurons produces an exact partial that merges
-    by addition — the paper's branch-node exchange.
     """
-    seg = lambda vals: jax.ops.segment_sum(vals, box_ids, num_segments=num_boxes)
-    den_w = seg(den_vac)
-    ax_w = seg(ax_vac)
-    den_pos = seg(den_vac[:, None] * positions)
-    ax_pos = seg(ax_vac[:, None] * positions)
-    den_c = den_pos / jnp.maximum(den_w, 1e-30)[:, None]
-    ax_c = ax_pos / jnp.maximum(ax_w, 1e-30)[:, None]
-
-    scaled = (positions - centers[box_ids]) / jnp.sqrt(delta)
-    feats = mi.monomials(scaled, p)                       # (n, k)
-    # A_alpha(B) = 1/alpha! sum_{j in B} den_j ((s_j - gc_B)/sqrt(delta))^alpha
-    herm = seg(den_vac[:, None] * feats)
-    herm = herm / jnp.asarray(mi.multi_factorial(p), herm.dtype)
-    # M_beta(B) = sum_{i in B} ax_i ((t_i - gc_B)/sqrt(delta))^beta
-    moms = seg(ax_vac[:, None] * feats)
-
-    return LevelData(den_w=den_w, ax_w=ax_w, den_c=den_c, ax_c=ax_c,
-                     gc=centers, herm=herm, moms=moms)
+    return finalize_level(centers, build_level_raw(
+        box_ids, num_boxes, centers, positions, ax_vac, den_vac, delta, p), p)
 
 
 def build_pyramid(structure: OctreeStructure, positions: jnp.ndarray,
@@ -240,8 +284,6 @@ def build_pyramid_m2m(structure: OctreeStructure, positions: jnp.ndarray,
     asymptotically cheaper for deep trees; both agree to truncation order
     (tests/test_octree.py::test_m2m_pyramid_matches_segment_sum).
     """
-    from repro.core import expansions as ex
-
     depth = structure.depth
     leaf_ids = jnp.asarray(structure.box_of(depth))
     leaf_centers = jnp.asarray(structure.centers_at(depth))

@@ -28,7 +28,6 @@ import dataclasses
 import math
 from typing import List, Optional
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -16,7 +16,7 @@ drops below the uniform entropy floor).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import gaussian_nbody as _gk
 from repro.kernels import m2l_pair as _m2l

@@ -5,7 +5,6 @@ reproduce; tests sweep shapes/dtypes and assert allclose between the two.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -38,7 +38,6 @@ def run(n_per_rank: int, ranks: int) -> dict:
     key = jax.ShapeDtypeStruct((), jax.numpy.uint32)  # placeholder
 
     # lower with concrete key type
-    import jax.numpy as jnp
     lowered = step.lower(state, jax.eval_shape(lambda: jax.random.key(0)))
     compiled = lowered.compile()
     mem = compiled.memory_analysis()

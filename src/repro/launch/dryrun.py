@@ -28,7 +28,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs

@@ -35,3 +35,23 @@ def make_ensemble_mesh(num_devices: int | None = None,
     if num_devices is not None:
         devs = devs[:num_devices]
     return Mesh(np.array(devs), (axis,))
+
+
+def make_sweep_mesh(ensemble: int, data: int,
+                    ensemble_axis: str = "ensemble",
+                    data_axis: str = "data") -> Mesh:
+    """2-D (ensemble x data) mesh for distributed parameter sweeps
+    (core/distributed.DistributedEnsembleEngine): K replicas sharded over
+    `ensemble` device rows, each replica's neurons/edges decomposed over
+    `data` devices per row.
+
+    The data axis is innermost: the per-step psum/all_gather run only along
+    it, between devices the default device order places closest; the replica
+    axis exchanges nothing, so it can span hosts/pods freely."""
+    need = ensemble * data
+    devs = jax.devices()
+    if len(devs) < need:
+        raise ValueError(f"sweep mesh needs {need} devices "
+                         f"({ensemble} x {data}), have {len(devs)}")
+    return Mesh(np.array(devs[:need]).reshape(ensemble, data),
+                (ensemble_axis, data_axis))

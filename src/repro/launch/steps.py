@@ -6,8 +6,6 @@ roofline reads.  Shapes come from `input_specs`; shardings from
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

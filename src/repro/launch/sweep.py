@@ -69,6 +69,40 @@ def pack_params(engine: PlasticityEngine,
                         inhibitory_fraction=col("inhibitory_fraction"))
 
 
+def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None):
+    """Pick the ensemble engine for `mesh`.
+
+    None or a replica-only mesh (launch.mesh.make_ensemble_mesh) -> a plain
+    `EnsembleEngine` (vmap, optionally shard_mapped over the replica axis).
+
+    A mesh with a "data" axis (launch.mesh.make_sweep_mesh with its default
+    axis names — this router keys on the names) -> the 2-D
+    `DistributedEnsembleEngine`: replicas over the ensemble axis AND each
+    replica's neurons decomposed over the data axis — the large-n sweep
+    regime where one replica does not fit (or saturate) a single device.  A
+    plain engine is rewrapped into a `DistributedPlasticityEngine`; note the
+    wrap re-sorts neurons by Morton code, so edge ids in `SweepResult.states`
+    refer to the SORTED order (`engine.positions_np` of the returned
+    ensemble's engine).  An engine that is already distributed must have
+    been built on this very mesh (its collectives are compiled against it).
+    """
+    from repro.core.distributed import (DistributedEnsembleEngine,
+                                        DistributedPlasticityEngine)
+    if mesh is not None and isinstance(engine, DistributedPlasticityEngine):
+        if mesh != engine.mesh:
+            raise ValueError(
+                "engine was built on a different mesh than the one passed; "
+                "rebuild the DistributedPlasticityEngine on the sweep mesh "
+                "(or pass mesh=engine.mesh)")
+        return DistributedEnsembleEngine(engine)
+    if mesh is not None and "data" in mesh.shape:
+        engine = DistributedPlasticityEngine(
+            engine.positions_np, mesh, "data", engine.msp_cfg,
+            engine.fmm_cfg, engine.engine_cfg)
+        return DistributedEnsembleEngine(engine)
+    return EnsembleEngine(engine, mesh=mesh)
+
+
 class SweepResult(NamedTuple):
     configs: List[Dict[str, float]]   # K config dicts (replicates expanded)
     states: SimState                  # final (K, ...) states
@@ -85,6 +119,10 @@ def run_sweep(engine: PlasticityEngine, configs: Sequence[Dict[str, float]],
 
     The replica count K = len(configs) * replicates; per-replica keys are
     split from `seed` so replicate r of config c is an independent stream.
+    mesh routes the batch: None -> one device; a replica-only mesh -> the
+    replica axis is sharded (EnsembleEngine); a 2-D (ensemble x data) mesh
+    from launch.mesh.make_sweep_mesh -> replicas x data-sharded neurons
+    (core/distributed.DistributedEnsembleEngine, for large-n grids).
     """
     swept_sigmas = [c.get("sigma", engine.fmm_cfg.sigma) for c in configs]
     if engine.fmm_cfg.sigma > min(swept_sigmas):
@@ -95,9 +133,11 @@ def run_sweep(engine: PlasticityEngine, configs: Sequence[Dict[str, float]],
             f"{min(swept_sigmas)} for a conservative guard.")
     expanded = [c for c in configs for _ in range(replicates)]
     k = len(expanded)
-    params = pack_params(engine, expanded)
     keys = jax.random.split(jax.random.key(seed), k)
-    ens = EnsembleEngine(engine, mesh=mesh)
+    ens = make_ensemble(engine, mesh)
+    # Pack AFTER routing: a 2-D wrap swaps in a DistributedPlasticityEngine
+    # (same configs, Morton-sorted neurons) — defaults must come from it.
+    params = pack_params(ens.engine, expanded)
     states, recs = ens.simulate(ens.init_states(k), keys, num_steps, params)
     jax.block_until_ready(recs.calcium_mean)
 

@@ -8,7 +8,7 @@ params with f32 norms-and-softmax is the default compute dtype policy
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ audio (hubert)      : encoder (bidirectional), input = precomputed frame
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

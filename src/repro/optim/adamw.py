@@ -8,7 +8,7 @@ a pytree mirroring the parameters, so it inherits the parameters' sharding
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -24,9 +24,8 @@ plan_elastic_mesh   largest feasible (data, model) mesh from survivors,
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 

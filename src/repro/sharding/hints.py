@@ -13,7 +13,7 @@ when unset (single-device tests/examples never touch it).
 from __future__ import annotations
 
 import threading
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -15,7 +15,7 @@ the dry-run prints every fallback so sharding gaps are visible, not silent).
 from __future__ import annotations
 
 import inspect
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -197,6 +197,34 @@ def ensemble_spec(tree: PyTree, axis: str = "ensemble", dim: int = 0) -> PyTree:
     runs K/devices replicas per device with zero collectives."""
     s = P(*([None] * dim + [axis]))
     return jax.tree.map(lambda _: s, tree)
+
+
+# -- 2-D sweep mesh (ensemble x data) ------------------------------------------
+
+def sweep2d_spec(ensemble_axis: str = "ensemble", data_axis: str = "data",
+                 rank: int = 2, data_dim: int = 1) -> P:
+    """P placing the replica axis at dim 0 and the data axis at `data_dim`
+    of a rank-`rank` leaf (None elsewhere)."""
+    parts: list = [None] * rank
+    parts[0] = ensemble_axis
+    parts[data_dim] = data_axis
+    return P(*parts)
+
+
+def ensemble_sharded_spec(tree: PyTree, ensemble_axis: str = "ensemble",
+                          data_axis: str = "data") -> PyTree:
+    """2-D sweep specs for a (K, ...)-leading SimState tree.
+
+    Composes the replica layout of `ensemble_spec` with the neuron-axis
+    decomposition of core/distributed.py: every leaf leads with the replica
+    axis; leaves with a second (neuron/edge) dim shard it over the data
+    axis; per-replica scalars (rank-1 leaves: step, dropped, keys, swept
+    KernelParams columns) replicate across data.  Replicas exchange zero
+    collectives — only the data axis carries the step's psum/all_gather.
+    """
+    return jax.tree.map(
+        lambda x: sweep2d_spec(ensemble_axis, data_axis, x.ndim)
+        if x.ndim >= 2 else P(ensemble_axis), tree)
 
 
 # -- whole-state helpers --------------------------------------------------------

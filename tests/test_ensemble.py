@@ -10,7 +10,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import EngineConfig, KernelParams, PlasticityEngine
+from repro.core.engine import EngineConfig, PlasticityEngine
 from repro.core.ensemble import EnsembleEngine
 from repro.core.msp import MSPConfig
 from repro.core.traversal import FMMConfig

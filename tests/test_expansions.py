@@ -5,7 +5,6 @@ the expansion error against direct evaluation stays below 0.125 %.
 """
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, strategies as st

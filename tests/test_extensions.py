@@ -1,6 +1,5 @@
 """Beyond-paper extensions: M2M upward pass, graph analysis, inhibition."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -1,7 +1,6 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, strategies as st

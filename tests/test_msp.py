@@ -1,8 +1,6 @@
 """MSP neuron dynamics (paper Sec. 3.1 / Table 1)."""
-import math
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

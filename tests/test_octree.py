@@ -1,6 +1,5 @@
 """Octree structure/pyramid invariants (property-based where useful)."""
 import numpy as np
-import pytest
 import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, strategies as st

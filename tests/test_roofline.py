@@ -9,7 +9,6 @@ import dataclasses
 import os
 import sys
 
-import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp

@@ -2,11 +2,10 @@
 import numpy as np
 import pytest
 import jax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.launch import steps as S
-from repro.optim import adamw
 from repro.sharding import rules
 
 

@@ -1,0 +1,193 @@
+"""2-D (ensemble x data) distributed sweeps: bitwise parity contract.
+
+The reproducibility contract of core/distributed.py: every collective is
+exact (integer partial sums, box-ownership pyramid partials, replicated
+synapse updates) and spike uniforms are drawn globally and sliced, so both
+`DistributedPlasticityEngine` and the 2-D `DistributedEnsembleEngine`
+reproduce sequential single-device `PlasticityEngine.simulate` runs BITWISE
+— on the integer synapse counts and on the float step records.
+
+The multi-device variants run in a subprocess with forced host devices (the
+CI multi-device job runs them on every PR); the (1, 1)-mesh variant runs
+in-process so the full 2-D code path is exercised in the default suite too.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.distributed import (DistributedEnsembleEngine,
+                                    DistributedPlasticityEngine)
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.launch import sweep
+from repro.launch.mesh import make_sweep_mesh
+from repro.sharding import rules
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RECORD_FIELDS = ("num_synapses", "calcium_mean", "calcium_std", "spike_rate")
+
+
+def _mesh_1x1():
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("ensemble", "data"))
+
+
+@pytest.fixture(scope="module")
+def engines():
+    rng = np.random.default_rng(3)
+    pos = rng.uniform(0, 1000.0, (160, 3)).astype(np.float32)
+    msp_cfg = MSPConfig.calibrated(speedup=100.0)
+    fmm_cfg = FMMConfig(c1=8, c2=8)
+    deng = DistributedPlasticityEngine(pos, _mesh_1x1(), "data", msp_cfg,
+                                       fmm_cfg, EngineConfig(method="fmm"))
+    seng = PlasticityEngine(deng.positions_np, msp_cfg, fmm_cfg,
+                            EngineConfig(method="fmm"))
+    return deng, seng
+
+
+def test_sweep2d_single_device_parity(engines):
+    """(K=2, 1x1 mesh): the full 2-D shard_map/vmap path on one device is
+    bitwise identical to sequential plain-engine runs, records included."""
+    deng, seng = engines
+    k, steps = 2, 1200
+    ens = DistributedEnsembleEngine(deng)
+    keys = jax.random.split(jax.random.key(7), k)
+    _, recs = ens.simulate(ens.init_states(k), keys, steps)
+    syn = np.asarray(recs.num_synapses)
+    assert int(syn[-1].min()) > 10            # non-trivial trajectories
+    for r in range(k):
+        _, ref = seng.simulate(seng.init_state(), keys[r], steps)
+        for name in RECORD_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(recs, name)[:, r]),
+                np.asarray(getattr(ref, name)), err_msg=f"{name} r={r}")
+
+
+def test_ensemble_sharded_spec_shapes(engines):
+    deng, _ = engines
+    ens = DistributedEnsembleEngine(deng)
+    states = ens.init_states(4)
+    spec = rules.ensemble_sharded_spec(states, "ensemble", "data")
+    from jax.sharding import PartitionSpec as P
+    assert spec.step == P("ensemble")
+    assert spec.dropped == P("ensemble")
+    assert spec.neurons.calcium == P("ensemble", "data")
+    assert spec.edges.src == P("ensemble", "data")
+
+
+def test_sweep_routes_2d_mesh(engines):
+    from repro.core.ensemble import EnsembleEngine
+    deng, seng = engines
+    assert isinstance(sweep.make_ensemble(seng, None), EnsembleEngine)
+    ens = sweep.make_ensemble(seng, _mesh_1x1())
+    assert isinstance(ens, DistributedEnsembleEngine)
+    # an already-distributed engine is used as-is
+    ens2 = sweep.make_ensemble(deng, _mesh_1x1())
+    assert ens2.engine is deng
+
+
+def test_mesh_validation(engines):
+    deng, _ = engines
+    with pytest.raises(ValueError, match="no 'replica' axis"):
+        DistributedEnsembleEngine(deng, ensemble_axis="replica")
+    with pytest.raises(ValueError, match="devices"):
+        make_sweep_mesh(ensemble=64, data=64)
+
+
+_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import (DistributedEnsembleEngine,
+                                    DistributedPlasticityEngine)
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.launch.mesh import make_sweep_mesh
+from repro.launch import sweep as sweep_mod
+
+assert len(jax.devices()) == 4
+RECORD_FIELDS = ("num_synapses", "calcium_mean", "calcium_std", "spike_rate")
+rng = np.random.default_rng(3)
+pos = rng.uniform(0, 1000.0, (160, 3)).astype(np.float32)
+msp_cfg = MSPConfig.calibrated(speedup=100.0)
+fmm_cfg = FMMConfig(c1=8, c2=8, sigma=400.0)
+mesh = make_sweep_mesh(ensemble=2, data=2)
+deng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg, fmm_cfg,
+                                   EngineConfig(method="fmm"))
+ens = DistributedEnsembleEngine(deng)
+seng = PlasticityEngine(deng.positions_np, msp_cfg, fmm_cfg,
+                        EngineConfig(method="fmm"))
+k, steps = 2, 1200
+keys = jax.random.split(jax.random.key(7), k)
+
+# --- 1. (K=2, data=2) == 2 sequential single-device runs, bitwise --------
+states, recs = ens.simulate(ens.init_states(k), keys, steps)
+syn = np.asarray(recs.num_synapses)
+assert int(syn[-1].min()) > 10, syn[-1]
+for r in range(k):
+    ref_st, ref = seng.simulate(seng.init_state(), keys[r], steps)
+    for name in RECORD_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(recs, name)[:, r]),
+            np.asarray(getattr(ref, name)), err_msg=f"{name} r={r}")
+    # final state parity too: the committed edge table is identical
+    np.testing.assert_array_equal(np.asarray(states.edges.valid[r]),
+                                  np.asarray(ref_st.edges.valid))
+    np.testing.assert_array_equal(np.asarray(states.edges.src[r]),
+                                  np.asarray(ref_st.edges.src))
+    np.testing.assert_array_equal(np.asarray(states.neurons.calcium[r]),
+                                  np.asarray(ref_st.neurons.calcium))
+print("PARITY_2D_OK")
+
+# --- 2. swept KernelParams reach every replica on the 2-D mesh -----------
+params = ens.default_params(k)._replace(
+    sigma=jnp.asarray([400.0, 750.0], jnp.float32),
+    inhibitory_fraction=jnp.asarray([0.0, 0.25], jnp.float32))
+_, recp = ens.simulate(ens.init_states(k), keys, steps, params)
+for r in range(k):
+    pr = jax.tree.map(lambda x: x[r], params)
+    _, ref = seng.simulate(seng.init_state(), keys[r], steps, pr)
+    np.testing.assert_array_equal(np.asarray(recp.num_synapses[:, r]),
+                                  np.asarray(ref.num_synapses))
+print("PARAMS_2D_OK")
+
+# --- 3. 1-D data-sharded engine keeps the same contract ------------------
+mesh1 = jax.sharding.Mesh(np.array(jax.devices()).reshape(4), ("data",))
+d1 = DistributedPlasticityEngine(pos, mesh1, "data", msp_cfg, fmm_cfg,
+                                 EngineConfig(method="fmm"))
+_, r1 = d1.simulate(d1.init_state(), jax.random.key(0), steps)
+_, rref = seng.simulate(seng.init_state(), jax.random.key(0), steps)
+for name in RECORD_FIELDS:
+    np.testing.assert_array_equal(np.asarray(getattr(r1, name)),
+                                  np.asarray(getattr(rref, name)), err_msg=name)
+print("PARITY_1D_OK")
+
+# --- 4. run_sweep routes large-n grids onto the 2-D mesh -----------------
+configs = sweep_mod.grid(sigma=[400.0, 750.0], inhibitory_fraction=[0.0, 0.25])
+res = sweep_mod.run_sweep(deng, configs, num_steps=300, seed=0, mesh=mesh)
+rows = sweep_mod.summarize(res)
+assert len(rows) == 4 and all("calcium_end" in r for r in rows)
+print("SWEEP_ROUTE_OK")
+'''
+
+
+@pytest.mark.slow
+def test_sweep2d_multidevice_subprocess():
+    """(K=2, data=2) on a forced 4-device 2x2 CPU mesh reproduces sequential
+    single-device synapse counts AND step records bitwise (the CI
+    multi-device job runs this on every PR)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-3000:]
+    for marker in ("PARITY_2D_OK", "PARAMS_2D_OK", "PARITY_1D_OK",
+                   "SWEEP_ROUTE_OK"):
+        assert marker in res.stdout

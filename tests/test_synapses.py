@@ -1,6 +1,5 @@
 """Synapse store: deletion, conflict resolution, insertion (paper phase 3)."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
