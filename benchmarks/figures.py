@@ -16,6 +16,9 @@ host-CPU and feed the relative-scaling claims only.
   fig_sweep2d           2-D (ensemble x data) mesh sweep vs sequential
                         single-device runs (replicas/sec + bitwise-parity
                         canary, core/distributed.DistributedEnsembleEngine)
+  fig_pyramid_scaling   per-device upward-pass work vs device count:
+                        owner-span O(n/p) partials vs legacy masked O(n)
+                        partials, with bitwise canaries (DESIGN.md §9)
 """
 from __future__ import annotations
 
@@ -327,6 +330,110 @@ def fig_sweep2d(ensemble=2, data=2, n=128, k=2, steps=400) -> Dict:
     if res.returncode != 0:
         return {"error": res.stderr[-800:]}
     return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+_PYRAMID_SCRIPT = r'''
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import octree
+from repro.core.distributed import DistributedPlasticityEngine
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.launch.mesh import make_data_mesh
+from repro.sharding.rules import (SHARD_MAP_NO_CHECK, pyramid_input_spec,
+                                  shard_map)
+
+p, n, reps, depth = (int(a) for a in sys.argv[1:5])
+rng = np.random.default_rng(0)
+pos = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+msp_cfg = MSPConfig.calibrated(speedup=100.0)
+fmm_cfg = FMMConfig(c1=8, c2=8)
+ecfg = EngineConfig(method="fmm", depth=depth)
+mesh = make_data_mesh(p)
+ax = jnp.array(rng.integers(0, 3, n), jnp.float32)
+den = jnp.array(rng.integers(0, 3, n), jnp.float32)
+out = {"p": p, "n": n, "depth": depth}
+ref = None
+for mode in ("owner_span", "masked"):
+    eng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg, fmm_cfg,
+                                      ecfg, pyramid_partials=mode)
+    if ref is None:   # single-device reference on the same sorted positions
+        seng = PlasticityEngine(eng.positions_np, msp_cfg, fmm_cfg, ecfg)
+        ref = jax.jit(lambda a, d: octree.build_pyramid(
+            seng.structure, seng.positions, a, d, fmm_cfg.delta))(ax, den)
+        out["span_widths"] = [int(w) for w in eng._spans.width]
+        out["shardable_elements_per_device"] = \
+            eng._spans.shardable_elements_per_device
+    fn = jax.jit(shard_map(lambda a, d: eng._local_pyramid(a, d), mesh=mesh,
+                           in_specs=(pyramid_input_spec(),) * 2,
+                           out_specs=P(), **SHARD_MAP_NO_CHECK))
+    got = fn(ax, den)
+    bitwise = all(
+        np.array_equal(np.asarray(getattr(a, nm)), np.asarray(getattr(b, nm)))
+        for a, b in zip(ref, got)
+        for nm in ("den_w", "ax_w", "den_c", "ax_c", "herm", "moms"))
+    # A parity violation is a bug, never a tolerance issue (DESIGN.md §9):
+    # fail the leg so the harness records {"error": ...} and run.py exits
+    # nonzero instead of shipping a false canary in the artifact.
+    assert bitwise, f"{mode} pyramid != single-device build at p={p}"
+    jax.block_until_ready(got[0].den_w)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(ax, den)[0].den_w)
+        ts.append(time.perf_counter() - t0)
+    out[mode] = {"bitwise": bool(bitwise), "pyramid_s": min(ts),
+                 "elements_per_device": eng.pyramid_elements_per_device(mode)}
+print(json.dumps(out))
+'''
+
+
+def fig_pyramid_scaling(device_counts=(1, 2, 4, 8), n=2048, reps=3,
+                        depth=3) -> Dict:
+    """Per-device pyramid work vs device count: owner-span vs masked partials.
+
+    Subprocess per forced host device count p.  Per-device work is counted as
+    segment-sum input elements (deterministic, host-independent): the masked
+    build reduces the full global vectors at every level — (depth+1)*n per
+    device regardless of p — while the owner-span build slices each level to
+    its max owner span: n at the single-box root plus ~n/p per deeper level
+    (DESIGN.md §9).  Headline: `shardable_elements_per_device` (levels >= 1)
+    scaling ~1/p, plus a bitwise-parity canary for BOTH modes against the
+    single-device `octree.build_pyramid`.  Wall times are informational only
+    on CI hosts (the forced devices share two cores)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    out: Dict = {}
+    for p in device_counts:
+        res = subprocess.run(
+            [sys.executable, "-c", _PYRAMID_SCRIPT, str(p), str(n),
+             str(reps), str(depth)],
+            env=env, capture_output=True, text=True, timeout=3600)
+        if res.returncode != 0:
+            out[str(p)] = {"error": res.stderr[-800:]}
+        else:
+            out[str(p)] = json.loads(res.stdout.strip().splitlines()[-1])
+    ok = [p for p in device_counts if "error" not in out[str(p)]]
+    if ok:
+        out["bitwise_all"] = all(
+            out[str(p)][m]["bitwise"] for p in ok
+            for m in ("owner_span", "masked"))
+    # Ratios are only meaningful against the single-device baseline; if the
+    # p=1 leg failed, its {"error": ...} entry already fails the run loudly.
+    if 1 in ok:
+        base = out["1"]
+        out["work_ratio_vs_p1"] = {
+            str(p): round(out[str(p)]["owner_span"]["elements_per_device"]
+                          / base["owner_span"]["elements_per_device"], 4)
+            for p in ok}
+        out["shardable_ratio_vs_p1"] = {
+            str(p): round(out[str(p)]["shardable_elements_per_device"]
+                          / base["shardable_elements_per_device"], 4)
+            for p in ok}
+    return out
 
 
 def complexity_sweep() -> Dict:

@@ -30,6 +30,7 @@ QUICK = {
     "fig5_expansion_error": dict(num_boxes=80),
     "fig_ensemble": dict(n=48, k=8, steps=400, reps=1),
     "fig_sweep2d": dict(ensemble=2, data=2, n=128, k=2, steps=300),
+    "fig_pyramid_scaling": dict(device_counts=(1, 2), n=512, reps=1, depth=2),
 }
 
 
@@ -75,6 +76,14 @@ def main() -> None:
                   f"mesh_rps={r['mesh_replicas_per_s']:.2f};"
                   f"seq_rps={r['sequential_replicas_per_s']:.2f};"
                   f"bitwise={r['bitwise_match']}")
+    run("fig_pyramid_scaling", figures.fig_pyramid_scaling,
+        lambda r: ";".join(
+            [f"error@p{k}={str(v['error'])[:40]}" for k, v in r.items()
+             if isinstance(v, dict) and "error" in v]
+            or ["shardable_ratio="
+                + "/".join(str(v) for v in r.get("shardable_ratio_vs_p1",
+                                                 {}).values())
+                + f";bitwise={r.get('bitwise_all')}"]))
 
     with open("bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)

@@ -46,11 +46,13 @@ def main():
         else MSPConfig.calibrated(speedup=args.speedup)
 
     if args.devices > 1:
-        from jax.sharding import Mesh
         from repro.core.distributed import DistributedPlasticityEngine
-        mesh = Mesh(np.array(jax.devices()[:args.devices]).reshape(-1),
-                    ("data",))
-        eng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg,
+        from repro.launch.mesh import make_data_mesh
+        # Owner-span pyramid partials (the default): per-device upward-pass
+        # work is O(n/p) per level, bitwise identical to one device
+        # (DESIGN.md §9).
+        eng = DistributedPlasticityEngine(pos, make_data_mesh(args.devices),
+                                          "data", msp_cfg,
                                           FMMConfig(c1=8, c2=8),
                                           EngineConfig(method=args.method))
     else:

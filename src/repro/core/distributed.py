@@ -8,7 +8,15 @@ Mapping (see DESIGN.md §2 for the full assumption log):
                          BOX is aggregated wholly by one owner device (the
                          one holding its first member), so every partial is
                          either the box's full sum or exact zeros and the
-                         merge is bitwise identical to a single-device build
+                         merge is bitwise identical to a single-device build.
+                         Partials are computed over *owner spans*: each
+                         device slices positions / vacancy vectors / box ids
+                         to the contiguous neuron range covering its owned
+                         boxes before the segment-sums (octree.owner_spans /
+                         build_pyramid_spans), so per-device pyramid work and
+                         slice memory are O(n/p) per level instead of O(n) —
+                         except the single-box root level, which stays an
+                         O(n) reduction on its owner (DESIGN.md §9)
   lazy remote fetch   -> replicated shared pyramid (prefetch-everything);
                          the hierarchical request-routed variant for 1000+
                          nodes is described in DESIGN.md §4
@@ -41,7 +49,7 @@ to the data axis (launch/mesh.make_sweep_mesh, sharding/rules 2-D specs).
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax
@@ -69,7 +77,8 @@ class DistributedPlasticityEngine(PlasticityEngine):
     def __init__(self, positions: np.ndarray, mesh: Mesh, axis: str = "data",
                  msp_cfg: MSPConfig = MSPConfig(),
                  fmm_cfg: FMMConfig = FMMConfig(),
-                 engine_cfg: EngineConfig = EngineConfig()):
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 pyramid_partials: str = "owner_span"):
         positions = np.asarray(positions, np.float32)
         self.mesh = mesh
         self.axis = axis
@@ -82,6 +91,11 @@ class DistributedPlasticityEngine(PlasticityEngine):
             raise ValueError(
                 f"distributed engine supports methods 'fmm'/'barnes_hut', "
                 f"got {engine_cfg.method!r}")
+        if pyramid_partials not in ("owner_span", "masked"):
+            raise ValueError(
+                f"pyramid_partials must be 'owner_span' or 'masked', "
+                f"got {pyramid_partials!r}")
+        self.pyramid_partials = pyramid_partials
         # Pre-sort by Morton code -> contiguous subtree ownership.
         tmp = octree.build_structure(positions, engine_cfg.domain,
                                      engine_cfg.depth)
@@ -89,18 +103,16 @@ class DistributedPlasticityEngine(PlasticityEngine):
         super().__init__(positions, msp_cfg, fmm_cfg, engine_cfg)
         # Box ownership per level: a box belongs to the device holding its
         # FIRST member (neurons are Morton-sorted, so box members are
-        # contiguous).  The owner aggregates the box from the replicated
-        # global vacancy vectors in global member order; everyone else
-        # contributes exact zeros, which makes the branch-exchange psum
-        # bitwise identical to the single-device pyramid.
-        n_local = self.n // self.num_shards
-        self._box_owner: List[np.ndarray] = []
-        for level in range(self.structure.depth + 1):
-            ids = self.structure.box_of(level)          # nondecreasing
-            first = np.r_[True, ids[1:] != ids[:-1]]
-            first_idx = np.maximum.accumulate(
-                np.where(first, np.arange(self.n), 0))
-            self._box_owner.append((first_idx // n_local).astype(np.int32))
+        # contiguous).  The owner aggregates the box in global member order;
+        # everyone else contributes exact zeros, which makes the
+        # branch-exchange psum bitwise identical to the single-device
+        # pyramid.  `owner_spans` turns the ownership map into per-level
+        # contiguous neuron ranges so the default partial build slices to
+        # O(n/p) elements instead of masking the O(n) global vectors
+        # (DESIGN.md §9; "masked" keeps the legacy O(n)-per-level build for
+        # comparison benchmarks — both are bitwise identical to
+        # octree.build_pyramid).
+        self._spans = octree.owner_spans(self.structure, self.num_shards)
 
     # -- sharded state ------------------------------------------------------
     def _specs(self) -> Tuple[SimState, StepRecord]:
@@ -113,27 +125,56 @@ class DistributedPlasticityEngine(PlasticityEngine):
         return state_spec, rec_spec
 
     # -- local-shard phases ---------------------------------------------------
+    def pyramid_elements_per_device(self, partials: Optional[str] = None
+                                    ) -> int:
+        """Segment-sum input elements each device feeds the upward pass.
+
+        owner_span: sum of per-level max span widths — n at the single-box
+        root plus ~n/p per deeper level.  masked: the legacy build, (depth+1)
+        * n (every device reduces the full global vectors at every level).
+        The fig_pyramid_scaling benchmark reports this per device count.
+        """
+        mode = self.pyramid_partials if partials is None else partials
+        if mode == "owner_span":
+            return self._spans.elements_per_device
+        return (self.structure.depth + 1) * self.n
+
     def _local_pyramid(self, ax_vac_g: jnp.ndarray, den_vac_g: jnp.ndarray,
                        fmm_cfg: Optional[FMMConfig] = None):
         """Partial pyramid from owned boxes + psum merge (branch exchange).
 
         ax_vac_g/den_vac_g are the replicated GLOBAL vacancy vectors (the
-        update already all_gathers them for the descent); each device masks
-        them to the boxes it owns, so the psum adds one full-precision sum
-        and p-1 exact zeros per box — bitwise equal to octree.build_pyramid
-        on a single device, for any shard count.
+        update already all_gathers them for the descent).  The default
+        "owner_span" partials slice them — together with positions and box
+        ids — to this device's contiguous owner span before the segment-sums
+        (octree.build_pyramid_spans), so per-level work/slice memory is
+        O(n/p) instead of O(n); the legacy "masked" partials multiply the
+        full global vectors by a box-ownership mask.  Either way each box's
+        partial is its full-precision member sum on the owner and exact
+        zeros elsewhere, so the psum adds one real sum and p-1 zeros per box
+        — bitwise equal to octree.build_pyramid on a single device, for any
+        shard count (DESIGN.md §4, §9).
         """
         cfg = self.fmm_cfg if fmm_cfg is None else fmm_cfg
         rank = jax.lax.axis_index(self.axis)
+        if self.pyramid_partials == "owner_span":
+            raws = octree.build_pyramid_spans(
+                self.structure, self._spans, rank, self.positions,
+                ax_vac_g, den_vac_g, cfg.delta, cfg.p)
+        else:
+            raws = []
+            for level in range(self.structure.depth + 1):
+                ids = jnp.asarray(self.structure.box_of(level))
+                centers = jnp.asarray(self.structure.centers_at(level))
+                mine = (jnp.asarray(self._spans.neuron_owner[level]) == rank
+                        ).astype(jnp.float32)
+                raws.append(octree.build_level_raw(
+                    ids, self.structure.boxes_at(level), centers,
+                    self.positions, ax_vac_g * mine, den_vac_g * mine,
+                    cfg.delta, cfg.p))
         levels = []
-        for level in range(self.structure.depth + 1):
-            ids = jnp.asarray(self.structure.box_of(level))
+        for level, raw in enumerate(raws):
             centers = jnp.asarray(self.structure.centers_at(level))
-            mine = (jnp.asarray(self._box_owner[level]) == rank
-                    ).astype(jnp.float32)
-            raw = octree.build_level_raw(
-                ids, self.structure.boxes_at(level), centers, self.positions,
-                ax_vac_g * mine, den_vac_g * mine, cfg.delta, cfg.p)
             merged = tuple(jax.lax.psum(x, self.axis) for x in raw)
             levels.append(octree.finalize_level(centers, merged, cfg.p))
         return levels

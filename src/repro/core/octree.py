@@ -18,11 +18,23 @@ holds one neuron.  On TPU we need static shapes, so we use a *dense pyramid*:
 Sharding: boxes at level l are contiguous Morton ranges, so "device d owns
 subtree roots [d*k, (d+1)*k) at the shared level" is a plain equal slice of
 every per-level array — the same layout the paper's MPI decomposition uses.
+
+Distributed upward pass (DESIGN.md §9): every per-box quantity is a plain
+segment-sum over the box's members, and Morton-sorted members are contiguous,
+so device d's contribution to a level is confined to its *owner span* — the
+contiguous neuron range covering the boxes whose first member it holds
+(`owner_spans`).  `build_level_raw_span` slices positions / vacancies /
+box ids to that span (O(n/p) elements per level instead of O(n)) and
+produces a partial whose owned boxes carry the full-precision sums and whose
+other boxes are exact zeros, so the cross-device psum merge is bitwise
+identical to the single-device `build_pyramid` (DESIGN.md §2, assumption 3;
+§4 for the exchange itself).  The root box necessarily spans all n neurons,
+so level 0 stays an O(n) slice on its owner — see DESIGN.md §9.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -270,6 +282,132 @@ def build_pyramid(structure: OctreeStructure, positions: jnp.ndarray,
         levels.append(build_level(ids, structure.boxes_at(l), centers,
                                   positions, ax_vac, den_vac, delta, p))
     return levels
+
+
+# ---------------------------------------------------------------------------
+# Owner-span decomposition (distributed upward pass, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OwnerSpans:
+    """Per-level owner spans for a `num_shards`-way Morton decomposition.
+
+    Built once in numpy (`owner_spans`) for structures whose neurons are
+    Morton-sorted (the distributed engine pre-sorts).  A box is owned by the
+    device holding its FIRST member; owners are nondecreasing along the
+    sorted neuron axis, so device d's owned boxes cover one contiguous
+    neuron range [start[l, d], stop[l, d]) per level l — its *owner span*.
+    Spans partition [0, n) at every level; a device owning no box at a level
+    has an empty span (start == stop).
+
+    `width[l]` is the level's max span length — the static SPMD slice size
+    every device uses at that level (shard_map needs uniform shapes).  At
+    level 0 there is a single box, so width[0] == n and the root stays an
+    O(n) reduction on its owner (DESIGN.md §9 records this as the one
+    irreducible term of the bitwise-parity contract).
+    """
+    num_shards: int
+    start: np.ndarray            # (depth+1, p) int32 span starts
+    stop: np.ndarray             # (depth+1, p) int32 span stops
+    width: Tuple[int, ...]       # per-level static slice sizes (max span)
+    neuron_owner: Tuple[np.ndarray, ...]  # per-level (n,) int32 box owners
+
+    @property
+    def elements_per_device(self) -> int:
+        """Per-device segment-sum input elements across the whole pyramid
+        (every device pays each level's max span under SPMD)."""
+        return int(sum(self.width))
+
+    @property
+    def shardable_elements_per_device(self) -> int:
+        """Same, excluding the single-box root level (the O(n/p) part)."""
+        return int(sum(self.width[1:]))
+
+
+def owner_spans(structure: OctreeStructure, num_shards: int) -> OwnerSpans:
+    """Owner spans of every level for `num_shards` equal Morton shards.
+
+    Requires neurons sorted by Morton code (box ids nondecreasing) and
+    n % num_shards == 0 — the distributed engine's layout.
+    """
+    n = structure.n
+    if n % num_shards:
+        raise ValueError(f"n={n} must divide into {num_shards} shards")
+    n_local = n // num_shards
+    depth = structure.depth
+    start = np.zeros((depth + 1, num_shards), np.int32)
+    stop = np.zeros((depth + 1, num_shards), np.int32)
+    width: List[int] = []
+    owners: List[np.ndarray] = []
+    ranks = np.arange(num_shards)
+    for level in range(depth + 1):
+        ids = structure.box_of(level)
+        if np.any(ids[1:] < ids[:-1]):
+            raise ValueError("owner_spans needs Morton-sorted neurons "
+                             "(box ids must be nondecreasing)")
+        # A box belongs to the device holding its first member; propagate the
+        # first-member index over the (contiguous) members, then shard it.
+        first = np.r_[True, ids[1:] != ids[:-1]]
+        first_idx = np.maximum.accumulate(np.where(first, np.arange(n), 0))
+        owner = (first_idx // n_local).astype(np.int32)   # nondecreasing
+        start[level] = np.searchsorted(owner, ranks, side="left")
+        stop[level] = np.searchsorted(owner, ranks, side="right")
+        width.append(max(int((stop[level] - start[level]).max()), 1))
+        owners.append(owner)
+    return OwnerSpans(num_shards=num_shards, start=start, stop=stop,
+                      width=tuple(width), neuron_owner=tuple(owners))
+
+
+def build_level_raw_span(box_ids: jnp.ndarray, num_boxes: int,
+                         centers: jnp.ndarray, positions: jnp.ndarray,
+                         ax_vac: jnp.ndarray, den_vac: jnp.ndarray,
+                         delta: float, p: int = DEFAULT_ORDER, *,
+                         start: jnp.ndarray, stop: jnp.ndarray,
+                         width: int):
+    """`build_level_raw` restricted to one owner span: O(width) work.
+
+    start/stop are this device's (traced) span bounds; `width` is the
+    level's static slice size (OwnerSpans.width — uniform across devices so
+    the SPMD program has one shape).  The slice base is clamped so it stays
+    in bounds; elements inside the slice but outside [start, stop) get zero
+    weights, so they contribute exact zeros to boxes owned by neighbouring
+    devices and the psum merge of the per-device partials stays bitwise
+    identical to the single-device build: each owned box receives exactly
+    its members, with identical per-element values, in identical order.
+    """
+    n = box_ids.shape[0]
+    base = jnp.clip(start, 0, max(n - width, 0))
+    sl = lambda x: jax.lax.dynamic_slice_in_dim(x, base, width)
+    idx = base + jnp.arange(width, dtype=start.dtype)
+    mask = ((idx >= start) & (idx < stop)).astype(ax_vac.dtype)
+    return build_level_raw(sl(box_ids), num_boxes, centers, sl(positions),
+                           sl(ax_vac) * mask, sl(den_vac) * mask, delta, p)
+
+
+def build_pyramid_spans(structure: OctreeStructure, spans: OwnerSpans,
+                        rank: jnp.ndarray, positions: jnp.ndarray,
+                        ax_vac: jnp.ndarray, den_vac: jnp.ndarray,
+                        delta: float, p: int = DEFAULT_ORDER) -> List[tuple]:
+    """Per-device partial raw pyramid over `rank`'s owner spans.
+
+    Returns one raw-sum tuple per level (see build_level_raw).  Merging each
+    level with an exact all-reduce ADD across ranks (lax.psum inside
+    shard_map, or a plain sum of the per-rank partials) and applying
+    `finalize_level` reproduces `build_pyramid` bitwise — the distributed
+    engine's branch exchange (DESIGN.md §4, §9).
+    """
+    starts = jnp.asarray(spans.start)
+    stops = jnp.asarray(spans.stop)
+    raws = []
+    for level in range(structure.depth + 1):
+        ids = jnp.asarray(structure.box_of(level))
+        centers = jnp.asarray(structure.centers_at(level))
+        raws.append(build_level_raw_span(
+            ids, structure.boxes_at(level), centers, positions,
+            ax_vac, den_vac, delta, p,
+            start=starts[level, rank], stop=stops[level, rank],
+            width=spans.width[level]))
+    return raws
 
 
 def build_pyramid_m2m(structure: OctreeStructure, positions: jnp.ndarray,

@@ -37,6 +37,23 @@ def make_ensemble_mesh(num_devices: int | None = None,
     return Mesh(np.array(devs), (axis,))
 
 
+def make_data_mesh(data: int | None = None, axis: str = "data") -> Mesh:
+    """1-D neuron-decomposition mesh for `DistributedPlasticityEngine`.
+
+    `data` devices along the paper's MPI-rank axis (defaults to every
+    visible device); the engine's per-step psum/all_gather and the
+    owner-span pyramid exchange all name this axis.  The engine requires
+    the shard count to divide the neuron count (n % data == 0).
+    """
+    devs = jax.devices()
+    if data is not None:
+        if len(devs) < data:
+            raise ValueError(f"data mesh needs {data} devices, "
+                             f"have {len(devs)}")
+        devs = devs[:data]
+    return Mesh(np.array(devs), (axis,))
+
+
 def make_sweep_mesh(ensemble: int, data: int,
                     ensemble_axis: str = "ensemble",
                     data_axis: str = "data") -> Mesh:

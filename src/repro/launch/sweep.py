@@ -69,7 +69,8 @@ def pack_params(engine: PlasticityEngine,
                         inhibitory_fraction=col("inhibitory_fraction"))
 
 
-def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None):
+def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
+                  pyramid_partials: str = "owner_span"):
     """Pick the ensemble engine for `mesh`.
 
     None or a replica-only mesh (launch.mesh.make_ensemble_mesh) -> a plain
@@ -85,6 +86,12 @@ def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None):
     refer to the SORTED order (`engine.positions_np` of the returned
     ensemble's engine).  An engine that is already distributed must have
     been built on this very mesh (its collectives are compiled against it).
+
+    pyramid_partials selects the distributed upward-pass build when a plain
+    engine is rewrapped: "owner_span" (default, O(n/p)-per-level sliced
+    partials) or "masked" (legacy O(n)-per-level global masking) — both are
+    bitwise identical to the single-device pyramid (DESIGN.md §9), so the
+    knob moves wall time/memory only, never results.
     """
     from repro.core.distributed import (DistributedEnsembleEngine,
                                         DistributedPlasticityEngine)
@@ -98,7 +105,8 @@ def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None):
     if mesh is not None and "data" in mesh.shape:
         engine = DistributedPlasticityEngine(
             engine.positions_np, mesh, "data", engine.msp_cfg,
-            engine.fmm_cfg, engine.engine_cfg)
+            engine.fmm_cfg, engine.engine_cfg,
+            pyramid_partials=pyramid_partials)
         return DistributedEnsembleEngine(engine)
     return EnsembleEngine(engine, mesh=mesh)
 

@@ -199,6 +199,27 @@ def ensemble_spec(tree: PyTree, axis: str = "ensemble", dim: int = 0) -> PyTree:
     return jax.tree.map(lambda _: s, tree)
 
 
+# -- owner-span pyramid partials (distributed upward pass) ---------------------
+
+def pyramid_input_spec() -> P:
+    """Spec of the upward pass's neuron-axis inputs (positions, global
+    vacancy vectors) at a shard_map boundary: REPLICATED into the span
+    build (used by the fig_pyramid_scaling harness; the engine's own
+    vacancies arrive via its in-step all_gather instead).
+
+    The connectivity update all_gathers vacancies for the descent anyway, so
+    the pyramid re-uses the replicated vectors and each device dynamic-slices
+    its owner span out of them — O(n/p) touched elements per level despite
+    the replicated layout.  The OwnerSpans start/stop tables are likewise
+    replicated, as closed-over host constants: every device holds the whole
+    (depth+1, p) table and selects its column by data-axis rank inside
+    shard_map (octree.build_pyramid_spans, DESIGN.md §9).  The hierarchical
+    request-routed exchange that drops the replication for 1000+ devices is
+    DESIGN.md §4's open variant.
+    """
+    return P()
+
+
 # -- 2-D sweep mesh (ensemble x data) ------------------------------------------
 
 def sweep2d_spec(ensemble_axis: str = "ensemble", data_axis: str = "data",

@@ -1,0 +1,189 @@
+"""Owner-span pyramid decomposition: invariants + bitwise parity edge cases.
+
+The distributed upward pass slices each device to the contiguous neuron
+range covering the boxes it owns (octree.owner_spans) and merges per-level
+raw partials by exact addition (DESIGN.md §9).  These tests run in-process
+on one device: the per-rank partials are computed sequentially and summed,
+which is arithmetically identical to the shard_map psum (each box's value is
+one full-precision sum plus exact zeros), and the result must match
+`octree.build_pyramid` BITWISE.  Multi-device shard_map coverage lives in
+tests/test_distributed.py and tests/test_sweep2d.py.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import octree
+
+DELTA = 750.0 ** 2
+
+
+def _sorted_structure(pos, domain=1000.0, depth=None):
+    """Morton-sort positions and rebuild — the distributed engine's layout."""
+    s0 = octree.build_structure(pos, domain, depth)
+    pos = pos[s0.order]
+    return pos, octree.build_structure(pos, domain, depth)
+
+
+def _uniform(n, seed=0, domain=1000.0, depth=None):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, domain, (n, 3)).astype(np.float32)
+    return _sorted_structure(pos, domain, depth)
+
+
+def _assert_bitwise_parity(pos, structure, num_shards, seed=1):
+    """Sum of per-rank owner-span partials == single-device build, bitwise."""
+    rng = np.random.default_rng(seed)
+    n = structure.n
+    ax = jnp.array(rng.integers(0, 3, n), jnp.float32)
+    den = jnp.array(rng.integers(0, 3, n), jnp.float32)
+    posj = jnp.asarray(pos)
+    # The parity contract relates COMPILED programs (the engines always run
+    # jitted) — jit both sides, like tests/test_distributed.py does.
+    ref = jax.jit(lambda a, d: octree.build_pyramid(
+        structure, posj, a, d, DELTA))(ax, den)
+    spans = octree.owner_spans(structure, num_shards)
+    partial = jax.jit(lambda r, a, d: octree.build_pyramid_spans(
+        structure, spans, r, posj, a, d, DELTA))
+    raws = [partial(jnp.int32(r), ax, den) for r in range(num_shards)]
+    for level in range(structure.depth + 1):
+        centers = jnp.asarray(structure.centers_at(level))
+        # Merge + finalize JITTED, like the engine's psum + finalize_level
+        # (finalize's divisions may round differently eagerly — the parity
+        # contract relates compiled programs, cf. tests/test_distributed.py).
+        fin = jax.jit(lambda *rs: octree.finalize_level(
+            centers,
+            tuple(sum(col[1:], start=col[0]) for col in map(list, zip(*rs)))))
+        got = fin(*[raws[r][level] for r in range(num_shards)])
+        want = ref[level]
+        for name in ("den_w", "ax_w", "den_c", "ax_c", "herm", "moms"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, name)), np.asarray(getattr(want, name)),
+                err_msg=f"shards={num_shards} level={level} {name}")
+
+
+def test_spans_partition_every_level():
+    pos, s = _uniform(256, seed=0)
+    for p in (1, 2, 4, 8):
+        spans = octree.owner_spans(s, p)
+        for level in range(s.depth + 1):
+            start, stop = spans.start[level], spans.stop[level]
+            # contiguous partition of [0, n): stop[d] == start[d+1]
+            assert start[0] == 0 and stop[-1] == s.n
+            np.testing.assert_array_equal(stop[:-1], start[1:])
+            assert (stop >= start).all()
+            assert spans.width[level] >= int((stop - start).max())
+            # every box's members land wholly inside its owner's span
+            owner = spans.neuron_owner[level]
+            assert (np.diff(owner) >= 0).all()
+        # the root box spans all neurons on its owner (device 0)
+        assert spans.width[0] == s.n
+        assert spans.elements_per_device \
+            == spans.shardable_elements_per_device + s.n
+
+
+@pytest.mark.parametrize("num_shards", [2, 4, 8])
+def test_bitwise_parity_uniform(num_shards):
+    """Uniform positions -> uneven spans (random occupancy), any shard count."""
+    pos, s = _uniform(256, seed=3)
+    _assert_bitwise_parity(pos, s, num_shards)
+
+
+def test_bitwise_parity_clustered_uneven_spans():
+    """Heavily clustered positions: spans far from n/p (one shard's boxes
+    hold most neurons), exercising the max-width slice clamping."""
+    rng = np.random.default_rng(7)
+    cluster = rng.normal(80.0, 30.0, (200, 3))
+    spread = rng.uniform(0, 1000.0, (56, 3))
+    pos = np.clip(np.concatenate([cluster, spread]), 0, 999.0
+                  ).astype(np.float32)
+    pos, s = _sorted_structure(pos, depth=3)
+    spans = octree.owner_spans(s, 4)
+    widths = np.asarray(spans.stop[s.depth]) - np.asarray(spans.start[s.depth])
+    assert widths.max() > 2 * widths.min() + 1   # genuinely uneven
+    _assert_bitwise_parity(pos, s, 4)
+
+
+def test_bitwise_parity_empty_span_shards():
+    """All neurons in one leaf box: every box is owned by shard 0, so the
+    other shards own nothing at any level (empty spans, zero partials)."""
+    rng = np.random.default_rng(11)
+    pos = (np.array([10.0, 10.0, 10.0], np.float32)
+           + rng.uniform(0, 5.0, (64, 3)).astype(np.float32))
+    pos, s = _sorted_structure(pos, depth=2)
+    spans = octree.owner_spans(s, 4)
+    for level in range(s.depth + 1):
+        start, stop = spans.start[level], spans.stop[level]
+        assert stop[0] == s.n                      # shard 0 owns everything
+        assert (start[1:] == stop[1:]).all()       # empty spans elsewhere
+    _assert_bitwise_parity(pos, s, 4)
+
+
+def test_bitwise_parity_depth1():
+    """Depth-1 tree: just the root and one 8-box level."""
+    pos, s = _uniform(64, seed=5, depth=1)
+    assert s.depth == 1
+    _assert_bitwise_parity(pos, s, 2)
+    _assert_bitwise_parity(pos, s, 4)
+
+
+def test_owner_spans_validation():
+    pos, s = _uniform(64, seed=9)
+    with pytest.raises(ValueError, match="divide"):
+        octree.owner_spans(s, 3)
+    # unsorted neurons are rejected (the decomposition needs contiguity)
+    rng = np.random.default_rng(13)
+    unsorted = rng.uniform(0, 1000.0, (64, 3)).astype(np.float32)
+    s_unsorted = octree.build_structure(unsorted, 1000.0, 2)
+    if np.any(np.diff(s_unsorted.box_of(s_unsorted.depth)) < 0):
+        with pytest.raises(ValueError, match="sorted"):
+            octree.owner_spans(s_unsorted, 2)
+
+
+@pytest.mark.parametrize("partials", ["owner_span", "masked"])
+def test_engine_modes_match_plain_engine_bitwise(partials):
+    """Both pyramid_partials modes reproduce the plain engine end to end on
+    a 1-device mesh — the masked legacy build must not rot while owner_span
+    is the default (multi-device coverage: the slow suites run owner_span,
+    fig_pyramid_scaling asserts parity for both modes at p up to 8)."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistributedPlasticityEngine
+    from repro.core.engine import EngineConfig, PlasticityEngine
+    from repro.core.msp import MSPConfig
+    from repro.core.traversal import FMMConfig
+    rng = np.random.default_rng(2)
+    pos = rng.uniform(0, 1000.0, (128, 3)).astype(np.float32)
+    msp_cfg = MSPConfig.calibrated(speedup=100.0)
+    fmm_cfg = FMMConfig(c1=8, c2=8)
+    ecfg = EngineConfig(method="fmm")
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    eng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg, fmm_cfg,
+                                      ecfg, pyramid_partials=partials)
+    _, recs = eng.simulate(eng.init_state(), jax.random.key(0), 1200)
+    seng = PlasticityEngine(eng.positions_np, msp_cfg, fmm_cfg, ecfg)
+    _, ref = seng.simulate(seng.init_state(), jax.random.key(0), 1200)
+    assert int(np.asarray(recs.num_synapses)[-1]) > 5
+    for name in ("num_synapses", "calcium_mean", "calcium_std", "spike_rate"):
+        np.testing.assert_array_equal(np.asarray(getattr(recs, name)),
+                                      np.asarray(getattr(ref, name)),
+                                      err_msg=f"{partials} {name}")
+
+
+def test_pyramid_partials_validation():
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistributedPlasticityEngine
+    rng = np.random.default_rng(2)
+    pos = rng.uniform(0, 1000.0, (96, 3)).astype(np.float32)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="pyramid_partials"):
+        DistributedPlasticityEngine(pos, mesh, "data",
+                                    pyramid_partials="bogus")
+
+
+def test_span_specs_replicated():
+    """The pyramid's neuron-axis inputs ride replicated through shard_map
+    (sharding/rules.py): slicing happens inside, by rank."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import rules
+    assert rules.pyramid_input_spec() == P()

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Docs-consistency check: every `DESIGN.md §N` reference must resolve.
+
+Scans src/, tests/, examples/ (plus the top-level *.md files, DESIGN.md's
+own cross-references included) and fails if any numeric `§N` token names a
+section DESIGN.md does not have.  Numeric § sections are a DESIGN.md-only
+convention in this repo (EXPERIMENTS.md uses named anchors like §Perf /
+§Roofline), so EVERY `§N` is treated as a citation — this catches chained
+forms ("DESIGN.md §4, §9"), continuation lines, and markdown-link forms
+that a `DESIGN.md §N`-adjacency regex would silently skip.  Run by CI on
+every PR and by tests/test_docs.py in the tier-1 suite, so a refactor that
+renumbers DESIGN.md (or a docstring citing a not-yet-written section) fails
+loudly instead of rotting.
+
+    python tools/check_design_refs.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REF = re.compile(r"§(\d+)")
+SECTION = re.compile(r"^##\s*§(\d+)\b", re.M)
+SCAN_DIRS = ("src", "tests", "examples", "benchmarks")
+SCAN_SUFFIXES = {".py", ".md", ".yml", ".yaml", ".toml"}
+
+
+def design_sections(root: Path) -> set[int]:
+    design = root / "DESIGN.md"
+    if not design.is_file():
+        raise SystemExit(f"FAIL: {design} does not exist")
+    return {int(m) for m in SECTION.findall(design.read_text())}
+
+
+def iter_files(root: Path):
+    for name in SCAN_DIRS:
+        base = root / name
+        if base.is_dir():
+            yield from (p for p in base.rglob("*")
+                        if p.suffix in SCAN_SUFFIXES)
+    yield from root.glob("*.md")
+
+
+def check(root: Path) -> list[str]:
+    sections = design_sections(root)
+    errors = []
+    for path in iter_files(root):
+        try:
+            text = path.read_text()
+        except (UnicodeDecodeError, OSError):
+            continue
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for num in REF.findall(line):
+                if int(num) not in sections:
+                    errors.append(
+                        f"{path.relative_to(root)}:{lineno}: cites "
+                        f"DESIGN.md §{num}, but DESIGN.md has no such "
+                        f"section (sections: {sorted(sections)})")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 \
+        else Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for err in errors:
+        print(err, file=sys.stderr)
+    if errors:
+        print(f"FAIL: {len(errors)} dangling DESIGN.md § reference(s)",
+              file=sys.stderr)
+        return 1
+    print(f"OK: all DESIGN.md § references resolve "
+          f"(sections {sorted(design_sections(root))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
