@@ -19,6 +19,10 @@ host-CPU and feed the relative-scaling claims only.
   fig_pyramid_scaling   per-device upward-pass work vs device count:
                         owner-span O(n/p) partials vs legacy masked O(n)
                         partials, with bitwise canaries (DESIGN.md §9)
+  fig_find_scaling      per-device find-phase work vs device count: sharded
+                        (owner-span descent + O(n) request exchange) vs the
+                        legacy replicated O(E) edge-table path, with bitwise
+                        canaries (DESIGN.md §10)
 """
 from __future__ import annotations
 
@@ -433,6 +437,109 @@ def fig_pyramid_scaling(device_counts=(1, 2, 4, 8), n=2048, reps=3,
             str(p): round(out[str(p)]["shardable_elements_per_device"]
                           / base["shardable_elements_per_device"], 4)
             for p in ok}
+    return out
+
+
+_FIND_SCRIPT = r'''
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.distributed import DistributedPlasticityEngine
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.launch.mesh import make_data_mesh
+from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
+
+p, n, steps, reps, depth = (int(a) for a in sys.argv[1:6])
+rng = np.random.default_rng(0)
+pos = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+msp_cfg = MSPConfig.calibrated(speedup=100.0)
+fmm_cfg = FMMConfig(c1=8, c2=8)
+ecfg = EngineConfig(method="fmm", depth=depth)
+mesh = make_data_mesh(p)
+out = {"p": p, "n": n, "depth": depth}
+ref = None
+for phase in ("sharded", "replicated"):
+    eng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg, fmm_cfg,
+                                      ecfg, find_phase=phase)
+    if ref is None:   # single-device reference on the same sorted positions
+        seng = PlasticityEngine(eng.positions_np, msp_cfg, fmm_cfg, ecfg)
+        _, ref = seng.simulate(seng.init_state(), jax.random.key(0), steps)
+        ref = np.asarray(ref.num_synapses)
+    _, recs = eng.simulate(eng.init_state(), jax.random.key(0), steps)
+    bitwise = np.array_equal(np.asarray(recs.num_synapses), ref)
+    # A parity violation is a bug, never a tolerance issue (DESIGN.md §10):
+    # fail the leg so run.py exits nonzero instead of shipping a false
+    # canary in the artifact.
+    assert bitwise, f"{phase} find phase != single-device sim at p={p}"
+
+    # Wall time of ONE connectivity-update step (representative vacancies,
+    # like fig3), separated from the activity steps.
+    state = eng.init_state()
+    state = state._replace(neurons=state.neurons._replace(
+        ax_elems=jnp.full((n,), 2.0), den_elems=jnp.full((n,), 2.0)))
+    state_spec, rec_spec = eng._specs()
+    step = jax.jit(shard_map(
+        lambda s, k: eng.local_step(s, k, do_update=jnp.bool_(True)),
+        mesh=mesh, in_specs=(state_spec, P()),
+        out_specs=(state_spec, rec_spec), **SHARD_MAP_NO_CHECK))
+    jax.block_until_ready(step(state, jax.random.key(0))[0].edges.valid)
+    ts = []
+    for r in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(state, jax.random.key(r))[0].edges.valid)
+        ts.append(time.perf_counter() - t0)
+    out[phase] = dict(eng.find_phase_work(phase), bitwise=bool(bitwise),
+                      update_step_s=min(ts))
+print(json.dumps(out))
+'''
+
+
+def fig_find_scaling(device_counts=(1, 2, 4, 8), n=2048, steps=800,
+                     reps=3, depth=3) -> Dict:
+    """Per-device find-phase work vs device count: sharded vs replicated.
+
+    Subprocess per forced host device count p.  Headline quantities are
+    deterministic, host-independent counters (`find_phase_work`): occupied
+    source boxes scored in the descent and neuron rows of the leaf-resolve
+    slab both scale ~1/p under the sharded phase (vs constant for the
+    replicated one), and the update-phase collective payload drops from
+    O(E) (the edge-table gather, 3E + 2n elements) to O(n) (the request
+    exchange + degree psums + dense descent maps).  Bitwise canaries assert
+    both phases reproduce single-device `simulate` exactly.  Wall times of
+    one connectivity-update step are informational on CI hosts (the forced
+    devices share two cores)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    out: Dict = {}
+    for p in device_counts:
+        res = subprocess.run(
+            [sys.executable, "-c", _FIND_SCRIPT, str(p), str(n),
+             str(steps), str(reps), str(depth)],
+            env=env, capture_output=True, text=True, timeout=3600)
+        if res.returncode != 0:
+            out[str(p)] = {"error": res.stderr[-800:]}
+        else:
+            out[str(p)] = json.loads(res.stdout.strip().splitlines()[-1])
+    ok = [p for p in device_counts if "error" not in out[str(p)]]
+    if ok:
+        out["bitwise_all"] = all(
+            out[str(p)][m]["bitwise"] for p in ok
+            for m in ("sharded", "replicated"))
+        out["payload_ratio_sharded_over_replicated"] = {
+            str(p): round(out[str(p)]["sharded"]["payload_elems"]
+                          / out[str(p)]["replicated"]["payload_elems"], 4)
+            for p in ok}
+    if 1 in ok:
+        base = out["1"]["sharded"]
+        out["descent_boxes_ratio_vs_p1"] = {
+            str(p): round(out[str(p)]["sharded"]["descent_boxes"]
+                          / base["descent_boxes"], 4) for p in ok}
+        out["resolution_rows_ratio_vs_p1"] = {
+            str(p): round(out[str(p)]["sharded"]["resolution_rows"]
+                          / base["resolution_rows"], 4) for p in ok}
     return out
 
 

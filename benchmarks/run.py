@@ -7,15 +7,21 @@ writes the full JSON to bench_results.json.
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig1 fig5  # subset
     PYTHONPATH=src python -m benchmarks.run --quick fig_ensemble fig_sweep2d
+    PYTHONPATH=src python -m benchmarks.run --quick --pr 5 fig_find_scaling
 
 --quick shrinks every figure to CI-smoke sizes (minutes on 2 cores): the
 numbers are not publication curves, but the code paths — including the
 multi-device subprocesses — are exercised end to end and the JSON artifact
 is uploaded per PR, so the perf trajectory stays populated.
+
+--pr N additionally copies the results into benchmarks/trajectory/
+BENCH_<N>.json — the committed per-PR perf trajectory (see
+benchmarks/README.md).
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 
@@ -31,12 +37,23 @@ QUICK = {
     "fig_ensemble": dict(n=48, k=8, steps=400, reps=1),
     "fig_sweep2d": dict(ensemble=2, data=2, n=128, k=2, steps=300),
     "fig_pyramid_scaling": dict(device_counts=(1, 2), n=512, reps=1, depth=2),
+    "fig_find_scaling": dict(device_counts=(1, 2), n=256, steps=400, reps=1,
+                             depth=2),
 }
 
 
 def main() -> None:
     args = sys.argv[1:]
     quick = "--quick" in args
+    pr_id = None
+    if "--pr" in args:
+        idx = args.index("--pr")
+        if idx + 1 >= len(args) or args[idx + 1].startswith("-") \
+                or args[idx + 1].startswith("fig"):
+            sys.exit("usage: --pr <id> (a PR number for "
+                     "benchmarks/trajectory/BENCH_<id>.json)")
+        pr_id = args[idx + 1]
+        del args[idx:idx + 2]
     want = set(a for a in args if not a.startswith("-"))
     results = {}
     rows = []
@@ -84,9 +101,32 @@ def main() -> None:
                 + "/".join(str(v) for v in r.get("shardable_ratio_vs_p1",
                                                  {}).values())
                 + f";bitwise={r.get('bitwise_all')}"]))
+    run("fig_find_scaling", figures.fig_find_scaling,
+        lambda r: ";".join(
+            [f"error@p{k}={str(v['error'])[:40]}" for k, v in r.items()
+             if isinstance(v, dict) and "error" in v]
+            or ["boxes_ratio="
+                + "/".join(str(v) for v in
+                           r.get("descent_boxes_ratio_vs_p1", {}).values())
+                + ";payload_ratio="
+                + "/".join(str(v) for v in
+                           r.get("payload_ratio_sharded_over_replicated",
+                                 {}).values())
+                + f";bitwise={r.get('bitwise_all')}"]))
 
     with open("bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
+    if pr_id is not None:
+        # Per-PR perf trajectory: a committed, numbered copy of the figures
+        # this PR ran (benchmarks/README.md "Perf trajectory").
+        tdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "trajectory")
+        os.makedirs(tdir, exist_ok=True)
+        path = os.path.join(tdir, f"BENCH_{pr_id}.json")
+        with open(path, "w") as f:
+            json.dump({"pr": pr_id, "quick": quick, "results": results},
+                      f, indent=1, default=str)
+        print(f"trajectory -> {path}", file=sys.stderr)
 
     # Subprocess-backed figures report crashes as {"error": ...} instead of
     # raising (so one bad leg doesn't lose the others' results) — surface

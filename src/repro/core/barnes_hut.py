@@ -30,21 +30,39 @@ from repro.core.traversal import FMMConfig, NEG_INF, resolve_leaf_partners
 
 def descend_barnes_hut(structure: OctreeStructure, levels: List[LevelData],
                        positions: jnp.ndarray, key: jax.Array,
-                       cfg: FMMConfig) -> jnp.ndarray:
-    """Per-neuron stochastic descent.  Returns (n,) target leaf box ids."""
+                       cfg: FMMConfig, *,
+                       row_start=None, row_count: int = 0) -> jnp.ndarray:
+    """Per-neuron stochastic descent.  Returns (n,) target leaf box ids.
+
+    row_start/row_count: optional contiguous neuron-row slice — the
+    distributed sharded find phase descends only its owned rows
+    (DESIGN.md §10).  The per-level Gumbel slab is drawn at the full (n, 8)
+    shape and row-sliced, so the descent is per-row bitwise identical to the
+    full one (the choice of each neuron depends only on its own row).
+    """
     n = structure.n
     delta = cfg.delta
-    box = jnp.zeros((n,), jnp.int32)            # every neuron starts at root
+    if row_start is None:
+        sl_rows = lambda x: x
+        slg = lambda g: g
+        m = n
+    else:
+        m = row_count
+        sl_rows = lambda x: jax.lax.dynamic_slice_in_dim(x, row_start, m)
+        slg = lambda g: jax.lax.dynamic_slice(
+            g, (row_start, jnp.int32(0)), (m, 8))
+    pos = sl_rows(positions)
+    box = jnp.zeros((m,), jnp.int32)            # every neuron starts at root
     for l in range(structure.depth):
         nxt = levels[l + 1]
         child = (box[:, None] << 3) + jnp.arange(8, dtype=jnp.int32)[None, :]
-        den_w = nxt.den_w[child]                                  # (n,8)
-        den_c = nxt.den_c[child]                                  # (n,8,3)
-        d2 = jnp.sum((positions[:, None, :] - den_c) ** 2, axis=-1)
-        logw = jnp.log(jnp.maximum(den_w, ex._LOG_EPS)) - d2 / delta
+        den_w = nxt.den_w[child]                                  # (m,8)
+        den_c = nxt.den_c[child]                                  # (m,8,3)
+        d2 = jnp.sum((pos[:, None, :] - den_c) ** 2, axis=-1)
+        logw = jnp.log(jnp.maximum(den_w, ex.LOG_EPS)) - d2 / delta
         logw = jnp.where(den_w > 0, logw, NEG_INF)
-        g = jax.random.gumbel(jax.random.fold_in(key, l + 1), logw.shape,
-                              logw.dtype)
+        g = slg(jax.random.gumbel(jax.random.fold_in(key, l + 1), (n, 8),
+                                  logw.dtype))
         pick = jnp.argmax(logw + g, axis=-1).astype(jnp.int32)
         box = (box << 3) + pick
     return box
@@ -53,14 +71,23 @@ def descend_barnes_hut(structure: OctreeStructure, levels: List[LevelData],
 def find_partners_bh(structure: OctreeStructure, levels: List[LevelData],
                      positions: jnp.ndarray, ax_vac: jnp.ndarray,
                      den_vac: jnp.ndarray, key: jax.Array,
-                     cfg: FMMConfig) -> jnp.ndarray:
-    """Barnes–Hut partner choice: per-neuron descent + exact leaf resolve."""
+                     cfg: FMMConfig, *,
+                     row_start=None, row_count: int = 0) -> jnp.ndarray:
+    """Barnes–Hut partner choice: per-neuron descent + exact leaf resolve.
+
+    With row_start/row_count, computes only the owned neuron rows — bitwise
+    equal to that slice of the full result (the BH descent is per-neuron, so
+    sharding it needs no cross-device merge at all, unlike the FMM descent's
+    per-level psum — DESIGN.md §10)."""
     k1, k2 = jax.random.split(key)
-    tgt = descend_barnes_hut(structure, levels, positions, k1, cfg)
+    tgt = descend_barnes_hut(structure, levels, positions, k1, cfg,
+                             row_start=row_start, row_count=row_count)
     has_any_den = levels[0].den_w[0] > 0
-    my_tgt = jnp.where((ax_vac >= 1.0) & has_any_den, tgt, -1)
+    ax_rows = ax_vac if row_start is None else \
+        jax.lax.dynamic_slice_in_dim(ax_vac, row_start, row_count)
+    my_tgt = jnp.where((ax_rows >= 1.0) & has_any_den, tgt, -1)
     return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
-                                 my_tgt, k2, cfg)
+                                 my_tgt, k2, cfg, row_start=row_start)
 
 
 def find_partners_direct(positions: jnp.ndarray, ax_vac: jnp.ndarray,
@@ -71,7 +98,7 @@ def find_partners_direct(positions: jnp.ndarray, ax_vac: jnp.ndarray,
     n = positions.shape[0]
     delta = cfg.delta
     d2 = jnp.sum((positions[:, None, :] - positions[None, :, :]) ** 2, axis=-1)
-    logw = jnp.log(jnp.maximum(den_vac, ex._LOG_EPS))[None, :] - d2 / delta
+    logw = jnp.log(jnp.maximum(den_vac, ex.LOG_EPS))[None, :] - d2 / delta
     eye = jnp.eye(n, dtype=bool)
     mask = (den_vac[None, :] > 0) & ~eye
     logw = jnp.where(mask, logw, NEG_INF)

@@ -20,18 +20,25 @@ Mapping (see DESIGN.md §2 for the full assumption log):
   lazy remote fetch   -> replicated shared pyramid (prefetch-everything);
                          the hierarchical request-routed variant for 1000+
                          nodes is described in DESIGN.md §4
-  request exchange    -> all_gather of the edge table + deterministic
-                         replicated conflict resolution and insertion
-                         (bitwise identical on every device, so no
-                         answer round-trip is needed)
+  request exchange    -> default find_phase="sharded" (DESIGN.md §10): each
+                         device descends only its owned occupied boxes
+                         (per-level integer psum of disjoint dense-map
+                         scatters), resolves leaf partners only for its
+                         owned neuron rows, and the devices exchange ONLY
+                         the per-neuron request vectors — O(n) ints, not the
+                         O(E) edge table — before a deterministic replicated
+                         conflict resolution and a slot-range-owned commit
+                         (synapses.insert_span).  find_phase="replicated"
+                         keeps the legacy all_gather-the-table path.
 
 Per activity step: one bool all_gather shares the previous step's spike
-vector (edge slots are sharded by SLOT RANGE — the replicated insert places
-an edge's unit anywhere in the global table, so the axon may live on another
-device), one psum merges the (n,) synaptic-input partial sums, and one
-all_gather assembles the global calcium/spike vectors for the StepRecord
+vector (edge slots are sharded by SLOT RANGE — the insert places an edge's
+unit anywhere in the global table's free-slot order, so the axon may live on
+another device), one psum merges the (n,) synaptic-input partial sums, and
+one all_gather assembles the global calcium/spike vectors for the StepRecord
 observables.  The connectivity update (every 100 steps) runs the pyramid
-psum + edge-table all_gather — the analogue of the paper's O(n/p + p) phase.
+psum + the find-phase exchange — the analogue of the paper's O(n/p + p)
+phase.
 
 Reproducibility contract: every collective is exact (integer-valued partial
 sums, box-ownership pyramid partials, replicated synapse updates) and the
@@ -78,13 +85,16 @@ class DistributedPlasticityEngine(PlasticityEngine):
                  msp_cfg: MSPConfig = MSPConfig(),
                  fmm_cfg: FMMConfig = FMMConfig(),
                  engine_cfg: EngineConfig = EngineConfig(),
-                 pyramid_partials: str = "owner_span"):
+                 pyramid_partials: str = "owner_span",
+                 find_phase: str = "sharded"):
         positions = np.asarray(positions, np.float32)
         self.mesh = mesh
         self.axis = axis
         self.num_shards = mesh.shape[axis]
         if positions.shape[0] % self.num_shards:
-            raise ValueError("n must divide the neuron axis size")
+            raise ValueError(
+                f"the {axis!r}-axis shard count ({self.num_shards}) must "
+                f"divide the neuron count (n={positions.shape[0]})")
         if engine_cfg.method not in ("fmm", "barnes_hut"):
             # fail fast instead of silently substituting another search and
             # voiding the bitwise single-device parity contract
@@ -95,7 +105,12 @@ class DistributedPlasticityEngine(PlasticityEngine):
             raise ValueError(
                 f"pyramid_partials must be 'owner_span' or 'masked', "
                 f"got {pyramid_partials!r}")
+        if find_phase not in ("sharded", "replicated"):
+            raise ValueError(
+                f"find_phase must be 'sharded' or 'replicated', "
+                f"got {find_phase!r}")
         self.pyramid_partials = pyramid_partials
+        self.find_phase = find_phase
         # Pre-sort by Morton code -> contiguous subtree ownership.
         tmp = octree.build_structure(positions, engine_cfg.domain,
                                      engine_cfg.depth)
@@ -113,6 +128,14 @@ class DistributedPlasticityEngine(PlasticityEngine):
         # comparison benchmarks — both are bitwise identical to
         # octree.build_pyramid).
         self._spans = octree.owner_spans(self.structure, self.num_shards)
+        # Slot-range sharding of the edge table needs the shard count to
+        # divide the capacity too.  It always does (edge_capacity is a
+        # per-neuron multiple of n and num_shards | n), but assert it
+        # explicitly rather than relying on that transitively.
+        if self.edge_capacity % self.num_shards:
+            raise ValueError(
+                f"the {axis!r}-axis shard count ({self.num_shards}) must "
+                f"divide the edge capacity (E={self.edge_capacity})")
 
     # -- sharded state ------------------------------------------------------
     def _specs(self) -> Tuple[SimState, StepRecord]:
@@ -179,6 +202,195 @@ class DistributedPlasticityEngine(PlasticityEngine):
             levels.append(octree.finalize_level(centers, merged, cfg.p))
         return levels
 
+    # -- phase 3: the connectivity update, two find-phase variants -----------
+    def _conn_update_replicated(self, state: SimState, *, kconn: jax.Array,
+                                params: Optional[KernelParams]) -> SimState:
+        """Legacy find phase: assemble the global edge table + element
+        counts, then run the whole synapse update REPLICATED — every device
+        computes the identical new table and commits its slice, so no answer
+        round-trip (or free-slot reconciliation) is needed.  O(E) collective
+        payload and O(n) descent/resolution work per device; kept behind
+        find_phase="replicated" for comparison (DESIGN.md §10)."""
+        axis, n, rank = self.axis, self.n, jax.lax.axis_index(self.axis)
+        kdel, kfind, kconf = jax.random.split(kconn, 3)
+        gather = lambda x: jax.lax.all_gather(x, axis, tiled=True)
+        edges_g = synapses.SynapseState(*(gather(x) for x in state.edges))
+        ax_el_g = gather(state.neurons.ax_elems)
+        den_el_g = gather(state.neurons.den_elems)
+        edges_g = synapses.delete_excess(edges_g, ax_el_g, den_el_g, kdel)
+        out_deg = synapses.out_degree(edges_g, n)
+        in_deg = synapses.in_degree(edges_g, n)
+        ax_vac = jnp.maximum(jnp.floor(ax_el_g).astype(jnp.int32)
+                             - out_deg, 0).astype(jnp.float32)
+        den_vac = jnp.maximum(jnp.floor(den_el_g).astype(jnp.int32)
+                              - in_deg, 0).astype(jnp.float32)
+
+        fmm_cfg = self._runtime_fmm_cfg(params)
+        levels = self._local_pyramid(ax_vac, den_vac, fmm_cfg)
+        if self.engine_cfg.method == "fmm":
+            partner = traversal.find_partners(
+                self.structure, levels, self.positions, ax_vac, den_vac,
+                kfind, fmm_cfg)
+        else:
+            partner = barnes_hut.find_partners_bh(
+                self.structure, levels, self.positions, ax_vac, den_vac,
+                kfind, fmm_cfg)
+
+        req = jnp.minimum(ax_vac.astype(jnp.int32),
+                          self.engine_cfg.max_requests_per_neuron)
+        req = jnp.where(partner >= 0, req, 0)
+        accepted = synapses.resolve_conflicts(
+            partner, req, den_vac.astype(jnp.int32), kconf)
+        new_edges_g, dropped = synapses.insert(
+            edges_g, partner, accepted,
+            self.engine_cfg.max_requests_per_neuron)
+        e_local = new_edges_g.src.shape[0] // self.num_shards
+        edges_l = synapses.SynapseState(
+            *(jax.lax.dynamic_slice_in_dim(x, rank * e_local, e_local)
+              for x in new_edges_g))
+        return state._replace(edges=edges_l,
+                              dropped=state.dropped + dropped)
+
+    def _conn_update_sharded(self, state: SimState, *, kconn: jax.Array,
+                             params: Optional[KernelParams]) -> SimState:
+        """Sharded find phase (the default; DESIGN.md §10).
+
+        Per device and update: the descent scores only the occupied boxes it
+        owns (per-level (8^l,) dense-map merge by exact integer psum of
+        disjoint scatters), leaf resolution runs only over its owned neuron
+        rows, and the request exchange moves the (n,) partner/request
+        vectors — O(n) ints — instead of the O(E) edge table; conflict
+        resolution is replicated on the gathered requests (deterministic
+        global priority bits from the shared key) and the commit is
+        slot-range-owned (synapses.insert_span + a (p,)-int free-count
+        exchange).  Deletion degrees come from integer psums; the edge-table
+        gather survives ONLY on the rare any-excess deletion path, under a
+        lax.cond (during growth no neuron has excess).  Every collective is
+        exact, so the result is bitwise identical to the replicated path —
+        and hence to single-device `PlasticityEngine.simulate`."""
+        axis, n, p = self.axis, self.n, self.num_shards
+        rank = jax.lax.axis_index(axis)
+        n_local = n // p
+        lo = rank * n_local
+        kdel, kfind, kconf = jax.random.split(kconn, 3)
+        gather = lambda x: jax.lax.all_gather(x, axis, tiled=True)
+        ax_el_g = gather(state.neurons.ax_elems)
+        den_el_g = gather(state.neurons.den_elems)
+
+        # --- deletion: global degrees via integer psum of local-slot
+        # partials; the table itself is gathered only when some neuron
+        # actually has excess (replicated predicate — psummed inputs).
+        deg = lambda ids, valid: jax.lax.psum(
+            jax.ops.segment_sum(valid.astype(jnp.int32), ids,
+                                num_segments=n), axis)
+        out_deg = deg(state.edges.src, state.edges.valid)
+        in_deg = deg(state.edges.dst, state.edges.valid)
+        excess_out = jnp.maximum(
+            out_deg - jnp.floor(ax_el_g).astype(jnp.int32), 0)
+        excess_in = jnp.maximum(
+            in_deg - jnp.floor(den_el_g).astype(jnp.int32), 0)
+
+        def with_deletion(edges: synapses.SynapseState) -> jnp.ndarray:
+            edges_g = synapses.SynapseState(*(gather(x) for x in edges))
+            new_valid = synapses._delete_excess_valid(
+                edges_g.src, edges_g.dst, edges_g.valid, ax_el_g, den_el_g,
+                kdel)
+            e_local = edges.src.shape[0]
+            return jax.lax.dynamic_slice_in_dim(new_valid, rank * e_local,
+                                                e_local)
+
+        any_excess = jnp.any(excess_out > 0) | jnp.any(excess_in > 0)
+        valid_l = jax.lax.cond(any_excess, with_deletion,
+                               lambda e: e.valid, state.edges)
+        edges = state.edges._replace(valid=valid_l)
+
+        # --- vacancies from post-deletion psummed degrees (replicated) ---
+        ax_vac = jnp.maximum(jnp.floor(ax_el_g).astype(jnp.int32)
+                             - deg(edges.src, edges.valid), 0
+                             ).astype(jnp.float32)
+        den_vac = jnp.maximum(jnp.floor(den_el_g).astype(jnp.int32)
+                              - deg(edges.dst, edges.valid), 0
+                              ).astype(jnp.float32)
+
+        fmm_cfg = self._runtime_fmm_cfg(params)
+        levels = self._local_pyramid(ax_vac, den_vac, fmm_cfg)
+        merge = lambda x: jax.lax.psum(x, axis)
+        if self.engine_cfg.method == "fmm":
+            partner_l = traversal.find_partners_sharded(
+                self.structure, self._spans, rank, levels, self.positions,
+                ax_vac, den_vac, kfind, fmm_cfg, merge,
+                row_start=lo, row_count=n_local)
+        else:
+            partner_l = barnes_hut.find_partners_bh(
+                self.structure, levels, self.positions, ax_vac, den_vac,
+                kfind, fmm_cfg, row_start=lo, row_count=n_local)
+
+        ax_vac_l = jax.lax.dynamic_slice_in_dim(ax_vac, lo, n_local)
+        req_l = jnp.minimum(ax_vac_l.astype(jnp.int32),
+                            self.engine_cfg.max_requests_per_neuron)
+        req_l = jnp.where(partner_l >= 0, req_l, 0)
+        # Request exchange: O(n) ints — the accepted requests, not the table.
+        partner = gather(partner_l)
+        req = gather(req_l)
+        accepted = synapses.resolve_conflicts(
+            partner, req, den_vac.astype(jnp.int32), kconf)
+        # Slot-range-owned commit: continue the global free-slot order from
+        # the lower ranks' free counts (one (p,)-int exchange).
+        free_counts = jax.lax.all_gather(
+            jnp.sum((~edges.valid).astype(jnp.int32)), axis)        # (p,)
+        offset = jnp.sum(jnp.where(jnp.arange(p) < rank, free_counts, 0))
+        new_edges, placed, total_new = synapses.insert_span(
+            edges, partner, accepted,
+            self.engine_cfg.max_requests_per_neuron, free_offset=offset)
+        dropped = total_new - jax.lax.psum(placed, axis)
+        return state._replace(edges=new_edges,
+                              dropped=state.dropped + dropped)
+
+    def find_phase_work(self, find_phase: Optional[str] = None) -> dict:
+        """Static per-device work/payload counters of ONE connectivity
+        update's find phase (the fig_find_scaling benchmark's headline
+        quantities; host-independent).
+
+        descent_boxes:    descent work units this device scores — occupied
+                          source boxes (levels 1..depth) for method="fmm";
+                          for method="barnes_hut" the descent is per-neuron
+                          (no box scoring, no map merges), so this counts
+                          the descended neuron rows instead.
+        resolution_rows:  neuron rows of the (rows, max_leaf) leaf-resolve
+                          slab this device evaluates.
+        payload_elems:    elements entering update-phase collectives —
+                          element-count gathers, degree psums, descent-map
+                          psums (fmm only; the BH descent merges nothing),
+                          the request exchange, and the commit counters;
+                          for the replicated phase, the edge-table gather.
+                          The pyramid psums are identical in both modes and
+                          excluded.  The sharded phase's rare any-excess
+                          deletion gather is reported separately
+                          (payload_elems_deletion_path).
+        """
+        mode = self.find_phase if find_phase is None else find_phase
+        s = self.structure
+        bh = self.engine_cfg.method == "barnes_hut"
+        occ_total = sum(int(s.occupied_at(l).shape[0])
+                        for l in range(1, s.depth + 1))
+        if mode == "replicated":
+            return dict(descent_boxes=self.n if bh else occ_total,
+                        resolution_rows=self.n,
+                        payload_elems=3 * self.edge_capacity + 2 * self.n,
+                        payload_elems_deletion_path=0)
+        n_local = self.n // self.num_shards
+        maps = 0 if bh else sum(s.boxes_at(l) for l in range(1, s.depth + 1))
+        return dict(
+            descent_boxes=(n_local if bh
+                           else self._spans.descent_boxes_per_device),
+            resolution_rows=n_local,
+            payload_elems=(2 * self.n          # element-count gathers
+                           + 4 * self.n        # degree psums (pre + post)
+                           + maps              # descent dense-map psums
+                           + 2 * self.n        # request exchange
+                           + self.num_shards + 1),   # free counts + placed
+            payload_elems_deletion_path=3 * self.edge_capacity)
+
     def local_step(self, state: SimState, key: jax.Array,
                    do_update: Optional[jax.Array] = None,
                    params: Optional[KernelParams] = None
@@ -219,49 +431,11 @@ class DistributedPlasticityEngine(PlasticityEngine):
                                    u=u)
         state = state._replace(neurons=neurons, step=state.step + 1)
 
-        def conn_update(state: SimState) -> SimState:
-            kdel, kfind, kconf = jax.random.split(kconn, 3)
-            gather = lambda x: jax.lax.all_gather(x, axis, tiled=True)
-            # Request exchange: assemble the global edge table + element
-            # counts, then run the whole synapse update REPLICATED — every
-            # device computes the identical new table and commits its slice,
-            # so no answer round-trip (or free-slot reconciliation) is needed.
-            edges_g = synapses.SynapseState(*(gather(x) for x in state.edges))
-            ax_el_g = gather(state.neurons.ax_elems)
-            den_el_g = gather(state.neurons.den_elems)
-            edges_g = synapses.delete_excess(edges_g, ax_el_g, den_el_g, kdel)
-            out_deg = synapses.out_degree(edges_g, n)
-            in_deg = synapses.in_degree(edges_g, n)
-            ax_vac = jnp.maximum(jnp.floor(ax_el_g).astype(jnp.int32)
-                                 - out_deg, 0).astype(jnp.float32)
-            den_vac = jnp.maximum(jnp.floor(den_el_g).astype(jnp.int32)
-                                  - in_deg, 0).astype(jnp.float32)
-
-            fmm_cfg = self._runtime_fmm_cfg(params)
-            levels = self._local_pyramid(ax_vac, den_vac, fmm_cfg)
-            if self.engine_cfg.method == "fmm":
-                partner = traversal.find_partners(
-                    self.structure, levels, self.positions, ax_vac, den_vac,
-                    kfind, fmm_cfg)
-            else:
-                partner = barnes_hut.find_partners_bh(
-                    self.structure, levels, self.positions, ax_vac, den_vac,
-                    kfind, fmm_cfg)
-
-            req = jnp.minimum(ax_vac.astype(jnp.int32),
-                              self.engine_cfg.max_requests_per_neuron)
-            req = jnp.where(partner >= 0, req, 0)
-            accepted = synapses.resolve_conflicts(
-                partner, req, den_vac.astype(jnp.int32), kconf)
-            new_edges_g, dropped = synapses.insert(
-                edges_g, partner, accepted,
-                self.engine_cfg.max_requests_per_neuron)
-            e_local = new_edges_g.src.shape[0] // self.num_shards
-            edges_l = synapses.SynapseState(
-                *(jax.lax.dynamic_slice_in_dim(x, rank * e_local, e_local)
-                  for x in new_edges_g))
-            return state._replace(edges=edges_l,
-                                  dropped=state.dropped + dropped)
+        conn_update = (self._conn_update_sharded
+                       if self.find_phase == "sharded"
+                       else self._conn_update_replicated)
+        conn_update = functools.partial(conn_update, kconn=kconn,
+                                        params=params)
 
         if do_update is None:
             do_update = (state.step % self.msp_cfg.update_interval) == 0
@@ -332,7 +506,13 @@ class DistributedEnsembleEngine:
     engine: a `DistributedPlasticityEngine` built on a mesh that ALSO has
             `ensemble_axis` (launch/mesh.make_sweep_mesh).  The ensemble
             axis size must divide the replica count K
-            (K % mesh.shape[ensemble_axis] == 0).
+            (K % mesh.shape[ensemble_axis] == 0).  The engine's
+            `pyramid_partials` and `find_phase` knobs ride along unchanged
+            (launch/sweep.make_ensemble threads them when rewrapping a
+            plain engine); note that under the replica vmap the sharded
+            find phase's rare-deletion cond lowers to a select, so its
+            O(E) gather branch executes every update (correct, but see
+            DESIGN.md §10 for the known follow-up).
     """
 
     def __init__(self, engine: DistributedPlasticityEngine,

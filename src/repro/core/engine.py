@@ -86,6 +86,18 @@ class EngineConfig:
     # "m2m" (classic FMM child->parent merging; cheaper for deep trees).
     pyramid: str = "segsum"
 
+    def __post_init__(self):
+        # Fail at construction: an unknown method used to surface only deep
+        # inside connectivity_update, and an unknown pyramid silently meant
+        # "segsum" (the `== "m2m"` else-branch fallthrough).
+        if self.method not in ("fmm", "barnes_hut", "direct"):
+            raise ValueError(
+                f"method must be one of 'fmm'/'barnes_hut'/'direct', "
+                f"got {self.method!r}")
+        if self.pyramid not in ("segsum", "m2m"):
+            raise ValueError(
+                f"pyramid must be 'segsum' or 'm2m', got {self.pyramid!r}")
+
 
 class PlasticityEngine:
     """Owns the static structure; state flows through pure jitted functions."""

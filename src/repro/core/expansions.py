@@ -223,15 +223,19 @@ def box_mass_taylor(axon_moms, axon_centroid, hermite_coeff,
 #     log m = -||y||^2 + log(series(y))     y = (tC - sC)/sqrt(delta)
 # where the series uses envelope-free Hermite polynomials.
 
-_LOG_EPS = 1e-30
+# Public floor for log-space weights: callers across the partner-search stack
+# (traversal.resolve_leaf_partners, barnes_hut) clamp vacancy weights with
+# this before taking logs.
+LOG_EPS = 1e-30
+_LOG_EPS = LOG_EPS   # deprecated alias, kept for one release
 
 
 def box_mass_direct_log(axon_count, axon_centroid, dendrite_weight,
                         dendrite_centroid, delta):
     """log of the point-mass direct box<->box attraction (batched)."""
     d2 = jnp.sum((axon_centroid - dendrite_centroid) ** 2, axis=-1)
-    return (jnp.log(jnp.maximum(axon_count, _LOG_EPS))
-            + jnp.log(jnp.maximum(dendrite_weight, _LOG_EPS))
+    return (jnp.log(jnp.maximum(axon_count, LOG_EPS))
+            + jnp.log(jnp.maximum(dendrite_weight, LOG_EPS))
             - d2 / delta)
 
 
@@ -244,9 +248,9 @@ def box_mass_hermite_log(axon_count, axon_centroid, hermite_coeff,
     y = (axon_centroid - dendrite_centroid) / jnp.sqrt(delta)
     polys = mi.hermite_polys(y, p)                        # (..., k)
     series = jnp.sum(polys * hermite_coeff, axis=-1)
-    return (jnp.log(jnp.maximum(axon_count, _LOG_EPS))
+    return (jnp.log(jnp.maximum(axon_count, LOG_EPS))
             - jnp.sum(y * y, axis=-1)
-            + jnp.log(jnp.maximum(series, _LOG_EPS)))
+            + jnp.log(jnp.maximum(series, LOG_EPS)))
 
 
 def box_mass_taylor_log_dense(axon_moms, axon_centroid, hermite_coeff,
@@ -268,7 +272,7 @@ def box_mass_taylor_log_dense(axon_moms, axon_centroid, hermite_coeff,
     b_poly = jnp.einsum('...ba,...a->...b', hmat, hermite_coeff * sign) / fact
     series = jnp.sum(axon_moms * b_poly, axis=-1)
     return (- jnp.sum(y * y, axis=-1)
-            + jnp.log(jnp.maximum(series, _LOG_EPS)))
+            + jnp.log(jnp.maximum(series, LOG_EPS)))
 
 
 def box_mass_taylor_log(axon_moms, axon_centroid, hermite_coeff,
@@ -300,4 +304,4 @@ def box_mass_taylor_log(axon_moms, axon_centroid, hermite_coeff,
     asign = (hermite_coeff * sign).reshape(hermite_coeff.shape[:-1] + (p, p, p))
     series = jnp.sum(asign * t, axis=(-3, -2, -1))
     return (- jnp.sum(y * y, axis=-1)
-            + jnp.log(jnp.maximum(series, _LOG_EPS)))
+            + jnp.log(jnp.maximum(series, LOG_EPS)))

@@ -30,6 +30,12 @@ other boxes are exact zeros, so the cross-device psum merge is bitwise
 identical to the single-device `build_pyramid` (DESIGN.md §2, assumption 3;
 §4 for the exchange itself).  The root box necessarily spans all n neurons,
 so level 0 stays an O(n) slice on its owner — see DESIGN.md §9.
+
+The same ownership map also shards the DOWNWARD pass: `OwnerSpans` carries
+per-level spans over the occupied-box lists (`occ_start`/`occ_stop`/
+`occ_width`), so the sharded descent (traversal.descend_sharded) scores each
+occupied source box on exactly one owner and merges the per-level dense
+target maps with an exact integer psum — DESIGN.md §10.
 """
 from __future__ import annotations
 
@@ -311,6 +317,15 @@ class OwnerSpans:
     stop: np.ndarray             # (depth+1, p) int32 span stops
     width: Tuple[int, ...]       # per-level static slice sizes (max span)
     neuron_owner: Tuple[np.ndarray, ...]  # per-level (n,) int32 box owners
+    # Owner spans over the OCCUPIED-box lists (structure.occupied_at): the
+    # sharded descent scores each occupied source box on exactly one owner
+    # (DESIGN.md §10).  Occupied boxes are sorted by id and owners are
+    # nondecreasing, so device d's owned occupied boxes are one contiguous
+    # range [occ_start[l, d], occ_stop[l, d]) of the level's occupied list;
+    # occ_width[l] is the static SPMD slice size (max span, >= 1).
+    occ_start: np.ndarray        # (depth+1, p) int32 occupied-list span starts
+    occ_stop: np.ndarray         # (depth+1, p) int32 occupied-list span stops
+    occ_width: Tuple[int, ...]   # per-level static occupied slice sizes
 
     @property
     def elements_per_device(self) -> int:
@@ -322,6 +337,13 @@ class OwnerSpans:
     def shardable_elements_per_device(self) -> int:
         """Same, excluding the single-box root level (the O(n/p) part)."""
         return int(sum(self.width[1:]))
+
+    @property
+    def descent_boxes_per_device(self) -> int:
+        """Occupied source boxes each device scores across the whole sharded
+        descent (levels 1..depth — the root pair is a replicated scalar);
+        every device pays each level's max occupied span under SPMD."""
+        return int(sum(self.occ_width[1:]))
 
 
 def owner_spans(structure: OctreeStructure, num_shards: int) -> OwnerSpans:
@@ -337,7 +359,10 @@ def owner_spans(structure: OctreeStructure, num_shards: int) -> OwnerSpans:
     depth = structure.depth
     start = np.zeros((depth + 1, num_shards), np.int32)
     stop = np.zeros((depth + 1, num_shards), np.int32)
+    occ_start = np.zeros((depth + 1, num_shards), np.int32)
+    occ_stop = np.zeros((depth + 1, num_shards), np.int32)
     width: List[int] = []
+    occ_width: List[int] = []
     owners: List[np.ndarray] = []
     ranks = np.arange(num_shards)
     for level in range(depth + 1):
@@ -354,8 +379,18 @@ def owner_spans(structure: OctreeStructure, num_shards: int) -> OwnerSpans:
         stop[level] = np.searchsorted(owner, ranks, side="right")
         width.append(max(int((stop[level] - start[level]).max()), 1))
         owners.append(owner)
+        # Spans over the occupied-box list: occupied box j (in sorted-id
+        # order, the order of structure.occupied_at) starts at the j-th
+        # first-member neuron, so its owner is that neuron's owner.
+        occ_owner = owner[np.flatnonzero(first)]          # nondecreasing
+        occ_start[level] = np.searchsorted(occ_owner, ranks, side="left")
+        occ_stop[level] = np.searchsorted(occ_owner, ranks, side="right")
+        occ_width.append(
+            max(int((occ_stop[level] - occ_start[level]).max()), 1))
     return OwnerSpans(num_shards=num_shards, start=start, stop=stop,
-                      width=tuple(width), neuron_owner=tuple(owners))
+                      width=tuple(width), neuron_owner=tuple(owners),
+                      occ_start=occ_start, occ_stop=occ_stop,
+                      occ_width=tuple(occ_width))
 
 
 def build_level_raw_span(box_ids: jnp.ndarray, num_boxes: int,

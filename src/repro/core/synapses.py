@@ -221,16 +221,14 @@ def resolve_conflicts(partner: jnp.ndarray, request_cnt: jnp.ndarray,
     return jnp.where(valid, accepted, 0).astype(jnp.int32)
 
 
-def insert(state: SynapseState, partner: jnp.ndarray, accepted: jnp.ndarray,
-           max_per_neuron: int) -> Tuple[SynapseState, jnp.ndarray]:
-    """Commit accepted requests as unit edges into free slots.
-
-    Returns (new_state, number_of_dropped_units) — units are dropped only if
-    the edge capacity overflows (sized generously by the engine; the counter
-    feeds the fault-tolerance telemetry rather than silently truncating).
-    """
+def _stage_units(partner: jnp.ndarray, accepted: jnp.ndarray,
+                 max_per_neuron: int):
+    """Dense (n*k,) staging buffers of the accepted unit edges, in global
+    request order, plus the total unit count.  Pure function of the
+    REPLICATED request vectors — identical on every device, which is what
+    lets the sharded commit (insert_span) fill disjoint slot ranges without
+    exchanging the staged payloads (DESIGN.md §10)."""
     n = partner.shape[0]
-    e = state.src.shape[0]
     k = max_per_neuron
     unit_valid = (jnp.arange(k, dtype=jnp.int32)[None, :]
                   < accepted[:, None]).reshape(-1)               # (n*k,)
@@ -248,6 +246,20 @@ def insert(state: SynapseState, partner: jnp.ndarray, accepted: jnp.ndarray,
         jnp.where(unit_valid, unit_src, 0))
     buf_dst = jnp.zeros((n * k,), jnp.int32).at[stage].add(
         jnp.where(unit_valid, unit_dst, 0))
+    return buf_src, buf_dst, total_new
+
+
+def insert(state: SynapseState, partner: jnp.ndarray, accepted: jnp.ndarray,
+           max_per_neuron: int) -> Tuple[SynapseState, jnp.ndarray]:
+    """Commit accepted requests as unit edges into free slots.
+
+    Returns (new_state, number_of_dropped_units) — units are dropped only if
+    the edge capacity overflows (sized generously by the engine; the counter
+    feeds the fault-tolerance telemetry rather than silently truncating).
+    """
+    n = partner.shape[0]
+    k = max_per_neuron
+    buf_src, buf_dst, total_new = _stage_units(partner, accepted, k)
 
     free = ~state.valid
     free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1            # (E,)
@@ -259,3 +271,38 @@ def insert(state: SynapseState, partner: jnp.ndarray, accepted: jnp.ndarray,
     placed = jnp.sum(take.astype(jnp.int32))
     dropped = total_new - placed
     return SynapseState(src=new_src, dst=new_dst, valid=new_valid), dropped
+
+
+def insert_span(state: SynapseState, partner: jnp.ndarray,
+                accepted: jnp.ndarray, max_per_neuron: int, *,
+                free_offset: jnp.ndarray
+                ) -> Tuple[SynapseState, jnp.ndarray, jnp.ndarray]:
+    """Slot-range-owned commit: `insert` for ONE device's slot range.
+
+    state: this device's contiguous slice of the global edge table.
+    partner/accepted: the REPLICATED (n,) request vectors (after the request
+    exchange + conflict resolution).
+    free_offset: number of free slots on lower-ranked devices' slot ranges,
+    so local free ranks continue the global free-slot order — one scalar per
+    device, exchanged with a (p,)-int all_gather by the caller.
+
+    Returns (new_local_state, placed_local, total_new); the global dropped
+    count is total_new - psum(placed_local).  All arithmetic is integer, so
+    the committed local slice is bitwise equal to the matching slice of
+    `insert` on the all-gathered table — without ever materialising it
+    (DESIGN.md §10).
+    """
+    n = partner.shape[0]
+    k = max_per_neuron
+    buf_src, buf_dst, total_new = _stage_units(partner, accepted, k)
+
+    free = ~state.valid
+    free_rank = free_offset + jnp.cumsum(free.astype(jnp.int32)) - 1
+    take = free & (free_rank < total_new) & (free_rank < n * k)
+    pick = jnp.minimum(free_rank, n * k - 1)
+    new_src = jnp.where(take, buf_src[pick], state.src)
+    new_dst = jnp.where(take, buf_dst[pick], state.dst)
+    new_valid = state.valid | take
+    placed = jnp.sum(take.astype(jnp.int32))
+    return (SynapseState(src=new_src, dst=new_dst, valid=new_valid),
+            placed, total_new)

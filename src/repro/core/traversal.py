@@ -32,7 +32,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import expansions as ex
-from repro.core import multi_index as mi
 from repro.core.multi_index import DEFAULT_ORDER
 from repro.core.octree import LevelData, OctreeStructure
 
@@ -68,6 +67,20 @@ class FMMConfig:
     # the smallest delta of the sweep so the guard stays conservative for
     # every replica in the batch (engine.PlasticityEngine._runtime_fmm_cfg).
     guard_delta: Optional[float] = None
+
+    def __post_init__(self):
+        # Validate the string knobs at construction: a typo in kernel_scale
+        # used to fall through to the `"sigma"` branch of `delta`, silently
+        # changing the kernel scale by a factor of sigma; an unknown
+        # tier_mode silently meant "paper" (the _tier_log_masses fallthrough).
+        if self.kernel_scale not in ("sigma_squared", "sigma"):
+            raise ValueError(
+                f"kernel_scale must be 'sigma_squared' (Eq. 8) or 'sigma' "
+                f"(Eq. 1), got {self.kernel_scale!r}")
+        if self.tier_mode not in ("paper", "direct", "hermite", "taylor"):
+            raise ValueError(
+                f"tier_mode must be one of 'paper'/'direct'/'hermite'/"
+                f"'taylor', got {self.tier_mode!r}")
 
     @property
     def delta(self) -> float:
@@ -175,11 +188,92 @@ def descend(structure: OctreeStructure, levels: List[LevelData],
     return tgt
 
 
+def descend_level_partial(structure: OctreeStructure, spans, rank: jnp.ndarray,
+                          level: int, nxt: LevelData, tgt: jnp.ndarray,
+                          key: jax.Array, cfg: FMMConfig) -> jnp.ndarray:
+    """One level of the owner-span-sharded descent (DESIGN.md §10).
+
+    Scores and Gumbel-samples ONLY this device's owned occupied source boxes
+    (`spans.occ_start/occ_stop[level, rank]`, sliced at the level's static
+    max width) against the replicated pyramid, and scatters the choices into
+    a dense (8^level,) partial map holding (target + 1) at owned boxes —
+    dead boxes carry 0 == (-1) + 1 — and exact integer zeros elsewhere.
+    Summing the per-rank partials (psum across the data axis) and shifting
+    by -1 reproduces the replicated `descend` map BITWISE: every occupied
+    box is scored by exactly one owner, on the same slab rows, with the
+    same (key, level)-folded Gumbel draws (the full (O, 8) slab is drawn —
+    counter-indexed bits are cheap — and the owner's rows are sliced out,
+    so the draws are bit-identical to the replicated path's).
+
+    tgt: the merged dense (8^{level-1},) target map of the previous level
+    (replicated after its psum).
+    """
+    b = structure.boxes_at(level)
+    occ_np = structure.occupied_at(level)
+    num_occ = occ_np.shape[0]
+    gumbel_full = jax.random.gumbel(jax.random.fold_in(key, level),
+                                    (num_occ, 8), jnp.float32)
+    start = jnp.asarray(spans.occ_start)[level, rank]
+    stop = jnp.asarray(spans.occ_stop)[level, rank]
+    width = spans.occ_width[level]
+    base = jnp.clip(start, 0, max(num_occ - width, 0))
+    occ = jax.lax.dynamic_slice_in_dim(jnp.asarray(occ_np, jnp.int32),
+                                       base, width)
+    gumbel = jax.lax.dynamic_slice(gumbel_full, (base, jnp.int32(0)),
+                                   (width, 8))
+    parent_tgt = tgt[occ >> 3]
+    tc = (jnp.maximum(parent_tgt, 0)[:, None] << 3) \
+        + jnp.arange(8, dtype=jnp.int32)[None, :]
+
+    gd = cfg.guard_delta if cfg.guard_delta is not None else cfg.delta
+    valid = structure.box_side(level) <= cfg.size_guard * math.sqrt(gd)
+    log_mass = _tier_log_masses(
+        nxt.ax_w[occ], nxt.ax_c[occ], nxt.gc[occ], nxt.moms[occ],
+        nxt.den_w[tc], nxt.den_c[tc], nxt.gc[tc], nxt.herm[tc],
+        cfg, valid)
+
+    log_mass = jnp.where(nxt.den_w[tc] > 0, log_mass, NEG_INF)
+    choice = jnp.argmax(log_mass + gumbel, axis=-1).astype(jnp.int32)
+    new_tgt = (jnp.maximum(parent_tgt, 0) << 3) + choice
+    alive = (parent_tgt >= 0) & (nxt.ax_w[occ] > 0) \
+        & jnp.any(nxt.den_w[tc] > 0, axis=-1)
+    idx = base + jnp.arange(width, dtype=jnp.int32)
+    mine = (idx >= start) & (idx < stop)
+    # Owned rows scatter (target + 1); pad rows (clamp overlap into a
+    # neighbour's range) scatter integer zeros — harmless under addition.
+    val = jnp.where(mine, jnp.where(alive, new_tgt, -1) + 1, 0)
+    return jnp.zeros((b,), jnp.int32).at[occ].add(val)
+
+
+def descend_sharded(structure: OctreeStructure, spans, rank: jnp.ndarray,
+                    levels: List[LevelData], key: jax.Array, cfg: FMMConfig,
+                    merge) -> jnp.ndarray:
+    """The full descent with per-level owner-span sharding (DESIGN.md §10).
+
+    merge: callable summing a (8^level,) int32 partial across ranks —
+    `lambda x: jax.lax.psum(x, axis)` inside shard_map; tests emulate it by
+    adding sequentially computed per-rank partials.  Integer addition of
+    disjoint scatters is exact, so the returned (8^depth,) map is bitwise
+    identical to the replicated `descend` for any shard count.
+    """
+    # Level 0: the root's (only) pair is a replicated scalar decision.
+    tgt = jnp.zeros((1,), jnp.int32)
+    active = (levels[0].ax_w > 0) & (levels[0].den_w > 0)
+    tgt = jnp.where(active, tgt, -1)
+    for level in range(1, structure.depth + 1):
+        partial = descend_level_partial(structure, spans, rank, level,
+                                        levels[level], tgt, key, cfg)
+        tgt = merge(partial) - 1
+    return tgt
+
+
 def resolve_leaf_partners(structure: OctreeStructure,
                           positions: jnp.ndarray,
                           ax_vac: jnp.ndarray, den_vac: jnp.ndarray,
                           my_tgt: jnp.ndarray, key: jax.Array,
-                          cfg: FMMConfig) -> jnp.ndarray:
+                          cfg: FMMConfig, *,
+                          row_start: Optional[jnp.ndarray] = None
+                          ) -> jnp.ndarray:
     """Neuron-level resolution inside the chosen leaf boxes.
 
     The paper's octree splits until leaves hold ONE neuron, so leaf-leaf pairs
@@ -188,37 +282,56 @@ def resolve_leaf_partners(structure: OctreeStructure,
     same distribution a deeper tree would induce, but with true positions
     (strictly more faithful to Eq. 1 than box centroids).
 
-    my_tgt: (n,) chosen target LEAF box per neuron (-1 = no request).  The FMM
+    my_tgt: chosen target LEAF box per neuron (-1 = no request).  The FMM
     path passes the per-leaf descent result gathered to neurons (all neurons
     of a leaf share the choice — the paper's reduced freedom of choice);
     Barnes–Hut passes genuinely per-neuron choices.
 
-    Returns (n,) partner neuron id per neuron, -1 where no request is made.
+    row_start: None -> resolve all n neurons (my_tgt is (n,)).  A traced
+    scalar -> resolve only the neuron rows [row_start, row_start + m) where
+    m = my_tgt.shape[0] (the sharded find phase passes each device's owned
+    contiguous rows, DESIGN.md §10).  positions/ax_vac/den_vac stay GLOBAL
+    either way — target buckets may live outside the row range, so the
+    candidate gathers read the replicated vectors.  The Gumbel slab is drawn
+    at the full (n, max_leaf) shape and row-sliced, so the sharded rows get
+    bit-identical draws to the full resolve; every per-row computation is
+    row-independent, hence the returned (m,) partners equal the matching
+    slice of the full (n,) result bitwise.
     """
     n = structure.n
     delta = cfg.delta
     order = jnp.asarray(structure.order)
     leaf_start = jnp.asarray(structure.leaf_start)
     max_leaf = max(structure.max_leaf, 1)
+    m = my_tgt.shape[0]
+    if row_start is None:
+        sl = lambda x: x
+        rows = jnp.arange(n, dtype=jnp.int32)
+        slg = lambda g: g
+    else:
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, row_start, m)
+        rows = row_start + jnp.arange(m, dtype=jnp.int32)
+        slg = lambda g: jax.lax.dynamic_slice(g, (row_start, jnp.int32(0)),
+                                              (m, max_leaf))
     safe_tgt = jnp.maximum(my_tgt, 0)
-    start = leaf_start[safe_tgt]                                 # (n,)
-    count = leaf_start[safe_tgt + 1] - start                     # (n,)
+    start = leaf_start[safe_tgt]                                 # (m,)
+    count = leaf_start[safe_tgt + 1] - start                     # (m,)
     slot = jnp.arange(max_leaf, dtype=jnp.int32)[None, :]        # (1,K)
-    cand = order[jnp.minimum(start[:, None] + slot, n - 1)]      # (n,K)
-    valid = slot < count[:, None]                                # (n,K)
+    cand = order[jnp.minimum(start[:, None] + slot, n - 1)]      # (m,K)
+    valid = slot < count[:, None]                                # (m,K)
 
-    d2 = jnp.sum((positions[:, None, :] - positions[cand]) ** 2, axis=-1)
-    logw = jnp.log(jnp.maximum(den_vac[cand], ex._LOG_EPS)) - d2 / delta
+    d2 = jnp.sum((sl(positions)[:, None, :] - positions[cand]) ** 2, axis=-1)
+    logw = jnp.log(jnp.maximum(den_vac[cand], ex.LOG_EPS)) - d2 / delta
     mask = valid & (den_vac[cand] > 0) \
-        & (cand != jnp.arange(n, dtype=jnp.int32)[:, None])      # no autapses
+        & (cand != rows[:, None])                                # no autapses
     logw = jnp.where(mask, logw, NEG_INF)
 
-    gumbel = jax.random.gumbel(jax.random.fold_in(key, 10_000),
-                               logw.shape, logw.dtype)
+    gumbel = slg(jax.random.gumbel(jax.random.fold_in(key, 10_000),
+                                   (n, max_leaf), logw.dtype))
     pick = jnp.argmax(logw + gumbel, axis=-1)
     partner = jnp.take_along_axis(cand, pick[:, None], axis=-1)[:, 0]
     any_ok = jnp.any(mask, axis=-1)
-    wants = (ax_vac >= 1.0) & (my_tgt >= 0) & any_ok
+    wants = (sl(ax_vac) >= 1.0) & (my_tgt >= 0) & any_ok
     return jnp.where(wants, partner, -1).astype(jnp.int32)
 
 
@@ -232,3 +345,25 @@ def find_partners(structure: OctreeStructure, levels: List[LevelData],
     my_tgt = tgt_leaf[jnp.asarray(structure.leaf_of)]
     return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
                                  my_tgt, k2, cfg)
+
+
+def find_partners_sharded(structure: OctreeStructure, spans,
+                          rank: jnp.ndarray, levels: List[LevelData],
+                          positions: jnp.ndarray, ax_vac: jnp.ndarray,
+                          den_vac: jnp.ndarray, key: jax.Array,
+                          cfg: FMMConfig, merge, *, row_start: jnp.ndarray,
+                          row_count: int) -> jnp.ndarray:
+    """Sharded `find_synapses`: owner-span descent + local-row leaf resolve.
+
+    Returns the (row_count,) partner requests of the neuron rows
+    [row_start, row_start + row_count) — bitwise equal to that slice of
+    `find_partners` on one device, for any shard count (DESIGN.md §10).
+    merge: the per-level descent-map reducer (see `descend_sharded`).
+    """
+    k1, k2 = jax.random.split(key)
+    tgt_leaf = descend_sharded(structure, spans, rank, levels, k1, cfg, merge)
+    leaf_ids = jax.lax.dynamic_slice_in_dim(
+        jnp.asarray(structure.leaf_of, jnp.int32), row_start, row_count)
+    my_tgt = tgt_leaf[leaf_ids]
+    return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
+                                 my_tgt, k2, cfg, row_start=row_start)

@@ -70,7 +70,8 @@ def pack_params(engine: PlasticityEngine,
 
 
 def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
-                  pyramid_partials: str = "owner_span"):
+                  pyramid_partials: Optional[str] = None,
+                  find_phase: Optional[str] = None):
     """Pick the ensemble engine for `mesh`.
 
     None or a replica-only mesh (launch.mesh.make_ensemble_mesh) -> a plain
@@ -89,9 +90,14 @@ def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
 
     pyramid_partials selects the distributed upward-pass build when a plain
     engine is rewrapped: "owner_span" (default, O(n/p)-per-level sliced
-    partials) or "masked" (legacy O(n)-per-level global masking) — both are
-    bitwise identical to the single-device pyramid (DESIGN.md §9), so the
-    knob moves wall time/memory only, never results.
+    partials) or "masked" (legacy O(n)-per-level global masking); find_phase
+    selects the connectivity-update decomposition: "sharded" (default,
+    owner-span descent + O(n) request exchange) or "replicated" (legacy
+    O(E) edge-table gather).  All four combinations are bitwise identical
+    to the single-device engine (DESIGN.md §9, §10), so the knobs move wall
+    time/memory/collective payload only, never results.  An engine that is
+    already distributed carries its own knobs; passing a CONFLICTING value
+    here raises rather than silently measuring the wrong variant.
     """
     from repro.core.distributed import (DistributedEnsembleEngine,
                                         DistributedPlasticityEngine)
@@ -101,12 +107,22 @@ def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
                 "engine was built on a different mesh than the one passed; "
                 "rebuild the DistributedPlasticityEngine on the sweep mesh "
                 "(or pass mesh=engine.mesh)")
+        for knob, want, have in (
+                ("pyramid_partials", pyramid_partials,
+                 engine.pyramid_partials),
+                ("find_phase", find_phase, engine.find_phase)):
+            if want is not None and want != have:
+                raise ValueError(
+                    f"engine was built with {knob}={have!r}; rebuild the "
+                    f"DistributedPlasticityEngine with {knob}={want!r} "
+                    f"instead of passing it here")
         return DistributedEnsembleEngine(engine)
     if mesh is not None and "data" in mesh.shape:
         engine = DistributedPlasticityEngine(
             engine.positions_np, mesh, "data", engine.msp_cfg,
             engine.fmm_cfg, engine.engine_cfg,
-            pyramid_partials=pyramid_partials)
+            pyramid_partials=pyramid_partials or "owner_span",
+            find_phase=find_phase or "sharded")
         return DistributedEnsembleEngine(engine)
     return EnsembleEngine(engine, mesh=mesh)
 

@@ -220,6 +220,27 @@ def pyramid_input_spec() -> P:
     return P()
 
 
+# -- sharded find phase (distributed connectivity update) ----------------------
+
+def descent_map_spec() -> P:
+    """Spec of the per-level dense (8^l,) descent target maps at a shard_map
+    boundary: REPLICATED — each level's map is the psum of the ranks'
+    disjoint owned-box scatters, so after the merge every device holds the
+    whole map (the next level's parent lookups may cross owners).  The
+    per-rank PARTIALS never cross a boundary; they exist only inside the
+    step (traversal.descend_sharded, DESIGN.md §10)."""
+    return P()
+
+
+def find_request_spec(data_axis: str = "data") -> P:
+    """Spec of the per-neuron partner/request vectors of the sharded find
+    phase BEFORE the request exchange: sharded over the data axis (each
+    device resolves only its owned contiguous neuron rows).  The request
+    exchange is an all_gather of exactly these vectors — O(n) ints, the
+    replacement for the legacy O(E) edge-table gather (DESIGN.md §10)."""
+    return P(data_axis)
+
+
 # -- 2-D sweep mesh (ensemble x data) ------------------------------------------
 
 def sweep2d_spec(ensemble_axis: str = "ensemble", data_axis: str = "data",

@@ -1,0 +1,45 @@
+"""Config-string validation: typos must fail at construction, not silently.
+
+A typo in `FMMConfig.kernel_scale` used to fall through to the `"sigma"`
+branch of `FMMConfig.delta`, silently changing the kernel scale by a factor
+of sigma; an unknown `tier_mode` silently meant "paper", and an unknown
+`EngineConfig.pyramid` silently meant "segsum".
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.engine import EngineConfig
+from repro.core.traversal import FMMConfig
+
+
+def test_kernel_scale_typo_rejected():
+    with pytest.raises(ValueError, match="kernel_scale"):
+        FMMConfig(kernel_scale="sigma_sqared")
+    # both documented spellings construct, with their documented deltas
+    assert FMMConfig(kernel_scale="sigma_squared", sigma=10.0).delta == 100.0
+    assert FMMConfig(kernel_scale="sigma", sigma=10.0).delta == 10.0
+
+
+def test_tier_mode_typo_rejected():
+    with pytest.raises(ValueError, match="tier_mode"):
+        FMMConfig(tier_mode="papers")
+    for mode in ("paper", "direct", "hermite", "taylor"):
+        FMMConfig(tier_mode=mode)
+
+
+def test_engine_config_rejects_unknown_values():
+    with pytest.raises(ValueError, match="pyramid"):
+        EngineConfig(pyramid="m2m2")
+    with pytest.raises(ValueError, match="method"):
+        EngineConfig(method="fm")
+    EngineConfig(method="barnes_hut", pyramid="m2m")   # valid combos pass
+
+
+def test_dataclasses_replace_revalidates():
+    """The engines rebuild FMMConfig via dataclasses.replace for traced
+    sweeps — __post_init__ must re-run (and pass) there too."""
+    cfg = FMMConfig()
+    with pytest.raises(ValueError, match="tier_mode"):
+        dataclasses.replace(cfg, tier_mode="bogus")
+    assert dataclasses.replace(cfg, sigma=400.0).sigma == 400.0

@@ -80,6 +80,56 @@ def test_locality_preference():
     assert frac_near > 0.95
 
 
+@pytest.mark.parametrize("tier", ["paper", "direct"])
+def test_descend_no_valid_target_all_neg_inf_slab(tier):
+    """Regression for the descent's no-valid-target path.
+
+    When a source box's parent is dead (parent_tgt == -1), its candidate
+    slab falls back to box 0's children; if every one of those has
+    den_w == 0 the slab is all-NEG_INF, argmax picks index 0, and ONLY the
+    `alive` mask keeps the result correct.  Engineer that layout (a
+    vacancy-free corner subtree plus a dendrite-free fallback box) and
+    assert the invariant: a returned tgt >= 0 always lands on a leaf with
+    dendrite vacancies, and dead subtrees stay -1.
+    """
+    rng = np.random.default_rng(11)
+    # low corner [0,200)^3: occupied but NO vacancies at all -> its level-1
+    # box has ax_w == 0 (dead), and its level-2 children (all inside box
+    # 0's subtree) have den_w == 0 -> the fallback slab is all-NEG_INF.
+    low = rng.uniform(0, 200, (60, 3))
+    mid = rng.uniform(550, 720, (60, 3))     # axons only
+    far = rng.uniform(800, 1000, (60, 3))    # dendrites only
+    pos = np.concatenate([low, mid, far]).astype(np.float32)
+    n = pos.shape[0]
+    ax = np.zeros(n, np.float32)
+    ax[60:120] = rng.integers(1, 3, 60)
+    den = np.zeros(n, np.float32)
+    den[120:] = rng.integers(1, 3, 60)
+    s = octree.build_structure(pos, 1000.0, 2)
+    cfg = FMMConfig(tier_mode=tier, c1=4, c2=4)
+    levels = octree.build_pyramid(s, jnp.asarray(pos), jnp.asarray(ax),
+                                  jnp.asarray(den), cfg.delta)
+    leaf_den = np.asarray(levels[-1].den_w)
+    leaf_ax = np.asarray(levels[-1].ax_w)
+    occupied = np.asarray(s.occupied_at(s.depth))
+    # the adversarial premise holds: some occupied leaves sit in a dead
+    # (ax_w == 0) subtree whose fallback candidates are all dendrite-free
+    dead_leaves = occupied[leaf_ax[occupied] == 0]
+    assert dead_leaves.size > 0
+    assert (leaf_den[:8] == 0).all()          # box 0's children: no dendrites
+    for k in range(5):
+        tgt = np.asarray(traversal.descend(s, levels, jax.random.key(k), cfg))
+        got = tgt[tgt >= 0]
+        assert got.size > 0                   # the mid axons do request
+        assert (leaf_den[got] > 0).all()      # ...and only into vacant leaves
+        assert (tgt[dead_leaves] == -1).all()
+    # degenerate limit: no dendrite vacancies anywhere -> every leaf dead
+    levels0 = octree.build_pyramid(s, jnp.asarray(pos), jnp.asarray(ax),
+                                   jnp.zeros((n,), jnp.float32), cfg.delta)
+    tgt0 = np.asarray(traversal.descend(s, levels0, jax.random.key(0), cfg))
+    assert (tgt0 == -1).all()
+
+
 def test_tier_modes_agree_statistically():
     """The expansion tiers should induce (nearly) the same choice
     distribution as pure point-mass descent — Fig. 1/2's premise."""
