@@ -23,6 +23,10 @@ host-CPU and feed the relative-scaling claims only.
                         (owner-span descent + O(n) request exchange) vs the
                         legacy replicated O(E) edge-table path, with bitwise
                         canaries (DESIGN.md §10)
+  fig_kernels           kernel-tier micro-bench: Pallas (interpret off-TPU)
+                        vs the kernels/ref.py oracle vs the wired core path,
+                        per tier and per size, with parity checks and
+                        analytic roofline numbers (DESIGN.md §11)
 """
 from __future__ import annotations
 
@@ -555,4 +559,142 @@ def complexity_sweep() -> Dict:
                   "barnes_hut_evals": bh_pairs,
                   "direct_evals": n * n,
                   "fmm_per_neuron": fmm_pairs / n}
+    return out
+
+
+def fig_kernels(gauss_sizes=((512, 2048), (2048, 8192)),
+                m2l_sizes=(4096, 16384),
+                msp_sizes=(16384, 262144),
+                reps=3) -> Dict:
+    """Kernel-tier microbenchmark: Pallas vs the ref.py oracle vs the wired
+    core path, per tier and per size (DESIGN.md §11).
+
+    Three legs per (tier, size):
+      pallas  the ops.py force-Pallas route — interpret mode on this CPU
+              host (correctness-representative, wall times are NOT: the
+              interpreter trades speed for exactness), native on TPU; the
+              recorded `backend` label says which one ran;
+      ref     the jitted kernels/ref.py oracle;
+      core    the jitted core-module path the engine actually calls
+              (direct.attraction / expansions.box_mass_taylor_log /
+              msp.step_neurons — the msp leg includes phase-2 growth, which
+              the fused kernel deliberately leaves outside).
+
+    Every leg is parity-checked against the ref leg (tolerances from
+    tests/test_kernels.py); a violation lands as an "error" key, which
+    benchmarks.run surfaces as a nonzero exit (the bench-smoke gate).  Each
+    tier also carries its analytic roofline numbers (flops_model.kernel_cost_*
+    against roofline.py's TPU-v5e peaks): t_compute_us / t_memory_us are what
+    the *native* kernel would cost on that machine, intensity = flops/byte.
+    """
+    import jax
+    import jax.numpy as jnp
+    from benchmarks import flops_model, roofline
+    from repro.core import direct, expansions as ex
+    from repro.core.msp import MSPConfig, init_neurons
+    from repro.core import msp as msp_mod
+    from repro.kernels import ops, ref
+
+    delta = 750.0 ** 2
+    backend_label = "pallas-tpu" if jax.default_backend() == "tpu" \
+        else "pallas-interpret"
+
+    def best_wall(fn, *args):
+        out = jax.block_until_ready(fn(*args))     # compile + warm
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            walls.append(time.perf_counter() - t0)
+        return out, min(walls)
+
+    def leg(entry, name, fn, *args, ref_out=None, rtol=None, atol=0.0):
+        out, wall = best_wall(fn, *args)
+        entry[f"{name}_s"] = wall
+        if ref_out is not None:
+            ref_arr = np.asarray(ref_out, np.float64)
+            got = np.asarray(out, np.float64)
+            dev = float(np.max(np.abs(got - ref_arr)
+                               / np.maximum(np.abs(ref_arr), 1e-12)))
+            entry[f"{name}_max_rel_dev"] = dev
+            if not np.allclose(got, ref_arr, rtol=rtol, atol=atol):
+                entry["error"] = (f"{name} leg deviates from ref oracle: "
+                                  f"max rel dev {dev:.3e} > rtol {rtol}")
+        return out
+
+    def roof(entry, cost):
+        entry["flops"] = cost["flops"]
+        entry["hbm_bytes"] = cost["hbm_bytes"]
+        entry["intensity_flops_per_byte"] = cost["flops"] / cost["hbm_bytes"]
+        entry["t_compute_us"] = cost["flops"] / roofline.PEAK_FLOPS * 1e6
+        entry["t_memory_us"] = cost["hbm_bytes"] / roofline.HBM_BW * 1e6
+
+    out: Dict = {"backend": backend_label, "reps": reps,
+                 "gaussian_nbody": {}, "m2l": {}, "msp_update": {}}
+
+    for n, m in gauss_sizes:
+        rng = np.random.default_rng(n)
+        t = jnp.array(rng.uniform(0, 1000, (n, 3)), jnp.float32)
+        s = jnp.array(rng.uniform(0, 1000, (m, 3)), jnp.float32)
+        w = jnp.array(rng.uniform(0, 5, (m,)), jnp.float32)
+        entry: Dict = {"n": n, "m": m}
+        ref_fn = jax.jit(lambda *a: ref.gaussian_nbody(*a, delta))
+        ref_out, entry["ref_s"] = best_wall(ref_fn, t, s, w)
+        leg(entry, "pallas",
+            jax.jit(lambda *a: ops.gaussian_nbody(*a, delta,
+                                                  use_pallas=True)),
+            t, s, w, ref_out=ref_out, rtol=2e-4, atol=1e-6)
+        leg(entry, "core",
+            jax.jit(lambda *a: direct.attraction(*a, delta)),
+            t, s, w, ref_out=ref_out, rtol=2e-4, atol=1e-6)
+        roof(entry, flops_model.kernel_cost_gaussian_nbody(n, m))
+        out["gaussian_nbody"][f"{n}x{m}"] = entry
+
+    for b in m2l_sizes:
+        rng = np.random.default_rng(b)
+        moms = jnp.array(rng.uniform(0, 1, (b, 64)), jnp.float32)
+        herm = jnp.array(rng.uniform(-1, 1, (b, 64)), jnp.float32)
+        y = jnp.array(rng.uniform(-1.5, 1.5, (b, 3)), jnp.float32)
+        entry = {"pairs": b}
+        ref_fn = jax.jit(lambda *a: ref.m2l_separable(*a))
+        ref_out, entry["ref_s"] = best_wall(ref_fn, moms, herm, y)
+        leg(entry, "pallas",
+            jax.jit(lambda *a: ops.m2l_separable(*a, use_pallas=True)),
+            moms, herm, y, ref_out=ref_out, rtol=2e-3, atol=2e-3)
+        # core path adds the log/envelope; compare in series space by
+        # inverting it (exp(log_mass + ||y||^2) = series).
+        core_fn = jax.jit(
+            lambda mo, he, yy: jnp.exp(
+                ex.box_mass_taylor_log(mo, jnp.zeros_like(yy), he,
+                                       yy * jnp.sqrt(delta), delta)
+                + jnp.sum(yy * yy, axis=-1)))
+        leg(entry, "core", core_fn, moms, herm, y,
+            ref_out=jnp.maximum(ref_out, ex.LOG_EPS), rtol=2e-3, atol=2e-3)
+        roof(entry, flops_model.kernel_cost_m2l(b))
+        out["m2l"][str(b)] = entry
+
+    cfg = MSPConfig.calibrated(speedup=100.0)
+    for n in msp_sizes:
+        rng = np.random.default_rng(n)
+        x = jnp.array(rng.uniform(0, 0.2, n), jnp.float32)
+        refrac = jnp.array(rng.integers(0, 5, n), jnp.int32)
+        ca = jnp.array(rng.uniform(0, 1, n), jnp.float32)
+        syn = jnp.array(rng.integers(0, 4, n), jnp.float32)
+        u = jnp.array(rng.uniform(0, 1, n), jnp.float32)
+        entry = {"n": n}
+        kw = dict(x0=cfg.x0, tau_x=cfg.tau_x, background=cfg.background,
+                  w_syn=cfg.w_syn, beta_ca=cfg.beta_ca, tau_ca=cfg.tau_ca,
+                  refractory=cfg.refractory)
+        ref_fn = jax.jit(lambda *a: ref.msp_update(*a, **kw)[0])
+        ref_out, entry["ref_s"] = best_wall(ref_fn, x, refrac, ca, syn, u)
+        leg(entry, "pallas",
+            jax.jit(lambda *a: ops.msp_update(*a, cfg, use_pallas=True)[0]),
+            x, refrac, ca, syn, u, ref_out=ref_out, rtol=1e-6, atol=1e-7)
+        state = init_neurons(n, cfg)._replace(x=x, refrac=refrac, calcium=ca)
+        leg(entry, "core",
+            jax.jit(lambda st, sy, uu: msp_mod.step_neurons(
+                st, sy, jax.random.key(0), cfg, u=uu).x),
+            state, syn, u, ref_out=ref_out, rtol=1e-6, atol=1e-7)
+        roof(entry, flops_model.kernel_cost_msp_update(n))
+        out["msp_update"][str(n)] = entry
     return out

@@ -209,3 +209,44 @@ def _cache_bytes(cfg: ModelConfig, b: int, s: int) -> float:
             * cfg.num_layers
     return 2.0 * b * s * cfg.num_kv_heads * cfg.resolved_head_dim * 2.0 \
         * cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel costs (benchmarks.figures.fig_kernels roofline legs)
+# ---------------------------------------------------------------------------
+#
+# Closed-form flop/byte accounting of the three repro.kernels hot spots, in
+# the same honest what-actually-runs spirit as the cell costs above: the
+# gaussian kernel counts its padded 8-lane matmul decomposition (not the
+# 3-component textbook distance), m2l counts the unrolled mode-product FMAs,
+# and msp counts the fused elementwise chain.  exp() counts as one flop.
+
+
+def kernel_cost_gaussian_nbody(n: int, m: int) -> Dict[str, float]:
+    """Tiled exact attraction: (n,3) targets x (m,3) weighted sources."""
+    lanes = 8                        # positions padded 3 -> 8 lanes
+    flops = float(n) * m * (2.0 * lanes   # cross term matmul
+                            + 6.0)        # d2 combine, max, scale, exp, mac
+    bytes_ = 4.0 * (n * lanes + m * lanes + m   # padded t, s + weights read
+                    + n)                        # output write
+    return {"flops": flops, "hbm_bytes": bytes_}
+
+
+def kernel_cost_m2l(b: int, p: int = 4) -> Dict[str, float]:
+    """Separable M2L series over b box pairs at order p (k = p^3 coeffs)."""
+    k = p ** 3
+    recur = 3.0 * (2 * p - 2) * 4.0          # per-dim Hermite recurrence
+    modes = 3.0 * 2.0 * p ** 4               # three (p x p) mode products
+    reduce_ = 2.0 * k                        # final coeff contraction
+    flops = float(b) * (recur + modes + reduce_)
+    bytes_ = 4.0 * b * (k + k + 8            # moms, herm, padded y read
+                        + 1)                 # series write
+    return {"flops": flops, "hbm_bytes": bytes_}
+
+
+def kernel_cost_msp_update(n: int) -> Dict[str, float]:
+    """Fused phase-1 neuron update over n neurons."""
+    flops = 12.0 * n                         # decay, input, draw, refrac, ca
+    bytes_ = 4.0 * (5 * n                    # x, refrac, ca, syn, u read
+                    + 4 * n)                 # x', refrac', spike, ca' write
+    return {"flops": flops, "hbm_bytes": bytes_}

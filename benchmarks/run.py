@@ -39,6 +39,8 @@ QUICK = {
     "fig_pyramid_scaling": dict(device_counts=(1, 2), n=512, reps=1, depth=2),
     "fig_find_scaling": dict(device_counts=(1, 2), n=256, steps=400, reps=1,
                              depth=2),
+    "fig_kernels": dict(gauss_sizes=((256, 1024),), m2l_sizes=(2048,),
+                        msp_sizes=(65536,), reps=2),
 }
 
 
@@ -64,6 +66,10 @@ def main() -> None:
         t0 = time.perf_counter()
         res = fn(**QUICK.get(name, {})) if quick else fn()
         dt = time.perf_counter() - t0
+        if isinstance(res, dict):
+            # Whole-figure wall time (compile included), for the trajectory
+            # regression gate (tools/check_bench_trajectory.py).
+            res["_wall_s"] = dt
         results[name] = res
         rows.append(f"{name},{dt * 1e6:.0f},{derived_fn(res)}")
         print(rows[-1], flush=True)
@@ -113,6 +119,20 @@ def main() -> None:
                            r.get("payload_ratio_sharded_over_replicated",
                                  {}).values())
                 + f";bitwise={r.get('bitwise_all')}"]))
+    run("fig_kernels", figures.fig_kernels,
+        lambda r: ";".join(
+            [f"error={str(v.get('error'))[:40]}"
+             for tier in ("gaussian_nbody", "m2l", "msp_update")
+             for v in r[tier].values() if "error" in v]
+            or [f"backend={r['backend']};"
+                + "gauss_ref_s="
+                + "/".join(f"{v['ref_s']:.3f}"
+                           for v in r["gaussian_nbody"].values())
+                + ";m2l_ref_s="
+                + "/".join(f"{v['ref_s']:.3f}" for v in r["m2l"].values())
+                + ";msp_ref_s="
+                + "/".join(f"{v['ref_s']:.4f}"
+                           for v in r["msp_update"].values())]))
 
     with open("bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)

@@ -27,17 +27,31 @@ def pairwise_kernel(targets: jnp.ndarray, sources: jnp.ndarray,
 
 
 def attraction(targets: jnp.ndarray, sources: jnp.ndarray,
-               weights: jnp.ndarray, delta: float) -> jnp.ndarray:
-    """u(t_i) = sum_j w_j K(t_i, s_j).  Exact n-body sum, O(N*M)."""
+               weights: jnp.ndarray, delta: float,
+               backend: str = "reference") -> jnp.ndarray:
+    """u(t_i) = sum_j w_j K(t_i, s_j).  Exact n-body sum, O(N*M).
+
+    backend: "pallas"/"auto" route through the tiled kernels.gaussian_nbody
+    (kernels/ops.py dispatch, DESIGN.md §11).  NOTE: partner *selection*
+    (barnes_hut.find_partners_direct, traversal.resolve_leaf_partners) needs
+    the per-pair log masses for its Gumbel-max draw, which a row-sum kernel
+    cannot supply — those paths keep their own pairwise computation and only
+    sum-typed callers (benchmarks fig5/fig_kernels, tests) route here.
+    """
+    if backend != "reference":
+        from repro.kernels import ops
+        return ops.gaussian_nbody(targets, sources, weights, delta,
+                                  use_pallas=ops.use_pallas_flag(backend))
     return pairwise_kernel(targets, sources, delta) @ weights
 
 
 def attraction_masked(targets: jnp.ndarray, sources: jnp.ndarray,
                       weights: jnp.ndarray, source_mask: jnp.ndarray,
-                      delta: float) -> jnp.ndarray:
+                      delta: float,
+                      backend: str = "reference") -> jnp.ndarray:
     """Exact attraction with invalid sources masked out (static shapes)."""
     w = jnp.where(source_mask, weights, 0.0)
-    return attraction(targets, sources, w, delta)
+    return attraction(targets, sources, w, delta, backend=backend)
 
 
 def box_mass_direct(target_centroid: jnp.ndarray, target_count: jnp.ndarray,

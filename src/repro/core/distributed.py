@@ -230,7 +230,7 @@ class DistributedPlasticityEngine(PlasticityEngine):
         if self.engine_cfg.method == "fmm":
             partner = traversal.find_partners(
                 self.structure, levels, self.positions, ax_vac, den_vac,
-                kfind, fmm_cfg)
+                kfind, fmm_cfg, backend=self.engine_cfg.backend)
         else:
             partner = barnes_hut.find_partners_bh(
                 self.structure, levels, self.positions, ax_vac, den_vac,
@@ -319,7 +319,8 @@ class DistributedPlasticityEngine(PlasticityEngine):
             partner_l = traversal.find_partners_sharded(
                 self.structure, self._spans, rank, levels, self.positions,
                 ax_vac, den_vac, kfind, fmm_cfg, merge,
-                row_start=lo, row_count=n_local)
+                row_start=lo, row_count=n_local,
+                backend=self.engine_cfg.backend)
         else:
             partner_l = barnes_hut.find_partners_bh(
                 self.structure, levels, self.positions, ax_vac, den_vac,
@@ -428,7 +429,7 @@ class DistributedPlasticityEngine(PlasticityEngine):
         u = jax.lax.dynamic_slice_in_dim(
             jax.random.uniform(kact, (n,), jnp.float32), lo, n_local)
         neurons = msp.step_neurons(state.neurons, syn_in, kact, self.msp_cfg,
-                                   u=u)
+                                   u=u, backend=self.engine_cfg.backend)
         state = state._replace(neurons=neurons, step=state.step + 1)
 
         conn_update = (self._conn_update_sharded

@@ -85,6 +85,12 @@ class EngineConfig:
     # Upward-pass variant: "segsum" (per-level segment sums, default) or
     # "m2m" (classic FMM child->parent merging; cheaper for deep trees).
     pyramid: str = "segsum"
+    # Numeric backend of the evaluation hot spots (DESIGN.md §11):
+    # "reference" = pure-jnp paths; "pallas" = the kernels/ Pallas kernels
+    # (interpret mode off-TPU, so CPU runs stay exact-but-slow); "auto" =
+    # Pallas on TPU, reference elsewhere.  Composes with `method`: the fused
+    # neuron update routes on every method, the M2L kernel on method="fmm".
+    backend: str = "reference"
 
     def __post_init__(self):
         # Fail at construction: an unknown method used to surface only deep
@@ -97,6 +103,10 @@ class EngineConfig:
         if self.pyramid not in ("segsum", "m2m"):
             raise ValueError(
                 f"pyramid must be 'segsum' or 'm2m', got {self.pyramid!r}")
+        if self.backend not in ("reference", "pallas", "auto"):
+            raise ValueError(
+                f"backend must be one of 'reference'/'pallas'/'auto', "
+                f"got {self.backend!r}")
 
 
 class PlasticityEngine:
@@ -189,7 +199,7 @@ class PlasticityEngine:
             if method == "fmm":
                 partner = traversal.find_partners(
                     self.structure, levels, self.positions, ax_vac, den_vac,
-                    kfind, fmm_cfg)
+                    kfind, fmm_cfg, backend=self.engine_cfg.backend)
             elif method == "barnes_hut":
                 partner = barnes_hut.find_partners_bh(
                     self.structure, levels, self.positions, ax_vac, den_vac,
@@ -223,7 +233,8 @@ class PlasticityEngine:
         kact, kconn = jax.random.split(key)
         syn_in = synapses.synaptic_input(state.edges, state.neurons.spiked,
                                          self._runtime_sign(params))
-        neurons = msp.step_neurons(state.neurons, syn_in, kact, self.msp_cfg)
+        neurons = msp.step_neurons(state.neurons, syn_in, kact, self.msp_cfg,
+                                   backend=self.engine_cfg.backend)
         state = state._replace(neurons=neurons, step=state.step + 1)
 
         if do_update is None:

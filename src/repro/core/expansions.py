@@ -276,7 +276,8 @@ def box_mass_taylor_log_dense(axon_moms, axon_centroid, hermite_coeff,
 
 
 def box_mass_taylor_log(axon_moms, axon_centroid, hermite_coeff,
-                        dendrite_centroid, delta, p: int = DEFAULT_ORDER):
+                        dendrite_centroid, delta, p: int = DEFAULT_ORDER,
+                        backend: str = "reference"):
     """log of `box_mass_taylor` via the SEPARABLE M2L (beyond-paper opt #1).
 
     The translation tensor factorises over dimensions,
@@ -285,8 +286,24 @@ def box_mass_taylor_log(axon_moms, axon_centroid, hermite_coeff,
     Hankel matrices G_d[a,b] = H_{a+b}(y_d): O(3 p^4) = 768 MACs per pair
     instead of O(p^6) = 4096, and no (..., k, k) workspace — this removed the
     Taylor-tier chunking entirely (see EXPERIMENTS.md §Perf, core-iteration 1).
+
+    backend: "pallas"/"auto" route the series through the m2l_pair kernel
+    (kernels/ops.py dispatch, DESIGN.md §11): batch dims are broadcast,
+    flattened to one pair axis, and the log/envelope applied here as below.
     """
     y = (dendrite_centroid - axon_centroid) / jnp.sqrt(delta)
+    if backend != "reference":
+        from repro.kernels import ops
+        k = axon_moms.shape[-1]
+        batch = jnp.broadcast_shapes(axon_moms.shape[:-1],
+                                     hermite_coeff.shape[:-1], y.shape[:-1])
+        flat = lambda a, d: jnp.broadcast_to(a, batch + (d,)).reshape(-1, d)
+        series = ops.m2l_separable(
+            flat(axon_moms, k), flat(hermite_coeff, k), flat(y, 3), p=p,
+            use_pallas=ops.use_pallas_flag(backend)).reshape(batch)
+        yb = jnp.broadcast_to(y, batch + (3,))
+        return (- jnp.sum(yb * yb, axis=-1)
+                + jnp.log(jnp.maximum(series, LOG_EPS)))
     big_p = 2 * p - 1
     hd = mi._per_dim_hermite_poly(y, big_p)               # (..., 3, 2p-1)
     import numpy as np

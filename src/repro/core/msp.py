@@ -95,7 +95,8 @@ def growth_curve(calcium: jnp.ndarray, eta: float, cfg: MSPConfig) -> jnp.ndarra
 
 def step_neurons(state: NeuronState, syn_input: jnp.ndarray,
                  key: jax.Array, cfg: MSPConfig,
-                 u: jnp.ndarray | None = None) -> NeuronState:
+                 u: jnp.ndarray | None = None,
+                 backend: str = "reference") -> NeuronState:
     """Phases 1 + 2 for one simulation step.
 
     syn_input: (n,) SIGNED count of presynaptic partners that spiked last
@@ -107,16 +108,29 @@ def step_neurons(state: NeuronState, syn_input: jnp.ndarray,
     device its slice, so spiking is bitwise invariant to the shard count
     (drawing (n_local,) per device from the shared key would give every
     device the SAME stream and none of them the single-device one).
+    backend: "reference" keeps the inline jnp phase 1 below; "pallas"/"auto"
+    route it through the fused kernels.ops.msp_update (DESIGN.md §11) —
+    bitwise identical spike/calcium streams, so the engine-level parity
+    contract holds across backends.  Phase 2 (growth) always runs here: the
+    growth curve is the structural-plasticity control law, not a hot spot.
     """
-    x = state.x + (cfg.x0 - state.x) / cfg.tau_x \
-        + cfg.background + cfg.w_syn * syn_input
-    if u is None:
-        u = jax.random.uniform(key, x.shape, x.dtype)
-    spiked = (u < x) & (state.refrac <= 0)
-    refrac = jnp.where(spiked, cfg.refractory,
-                       jnp.maximum(state.refrac - 1, 0))
-    calcium = state.calcium * (1.0 - cfg.tau_ca) \
-        + cfg.beta_ca * spiked.astype(x.dtype)
+    if backend != "reference":
+        from repro.kernels import ops
+        if u is None:
+            u = jax.random.uniform(key, state.x.shape, state.x.dtype)
+        x, refrac, spiked, calcium = ops.msp_update(
+            state.x, state.refrac, state.calcium, syn_input, u, cfg,
+            use_pallas=ops.use_pallas_flag(backend))
+    else:
+        x = state.x + (cfg.x0 - state.x) / cfg.tau_x \
+            + cfg.background + cfg.w_syn * syn_input
+        if u is None:
+            u = jax.random.uniform(key, x.shape, x.dtype)
+        spiked = (u < x) & (state.refrac <= 0)
+        refrac = jnp.where(spiked, cfg.refractory,
+                           jnp.maximum(state.refrac - 1, 0))
+        calcium = state.calcium * (1.0 - cfg.tau_ca) \
+            + cfg.beta_ca * spiked.astype(x.dtype)
     ax = jnp.maximum(state.ax_elems + growth_curve(calcium, cfg.eta_axon, cfg), 0.0)
     den = jnp.maximum(state.den_elems
                       + growth_curve(calcium, cfg.eta_dendrite, cfg), 0.0)

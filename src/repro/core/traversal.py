@@ -90,13 +90,18 @@ class FMMConfig:
 
 def _tier_log_masses(child_ax_w, child_ax_c, child_gc, child_moms,
                      tgt_den_w, tgt_den_c, tgt_gc, tgt_herm,
-                     cfg: FMMConfig, expansions_valid: bool) -> jnp.ndarray:
+                     cfg: FMMConfig, expansions_valid: bool,
+                     backend: str = "reference") -> jnp.ndarray:
     """Blend the three evaluation tiers of Alg. 2 into one log-mass slab.
 
     Shapes: child_* are (B, ...) for the B source boxes of the new level;
     tgt_* are (B, 8, ...) for the 8 candidate target children of each.
     Expansions are anchored at the static geometric centers `gc`.
     Returns (B, 8) log attraction masses.
+
+    backend: routed to the Taylor tier only (expansions.box_mass_taylor_log
+    -> the m2l_pair kernel; DESIGN.md §11).  The direct and Hermite tiers are
+    O(k)-per-pair vector ops with no kernel counterpart.
     """
     delta = cfg.delta
     ax_w = child_ax_w[:, None]                                    # (B,1)
@@ -116,7 +121,8 @@ def _tier_log_masses(child_ax_w, child_ax_c, child_gc, child_moms,
         def one_chunk(args):
             moms, s_gc, herm, d_gc = args
             return ex.box_mass_taylor_log(moms[:, None, :], s_gc[:, None, :],
-                                          herm, d_gc, delta, cfg.p)
+                                          herm, d_gc, delta, cfg.p,
+                                          backend=backend)
         b = child_moms.shape[0]
         chunk = cfg.taylor_chunk
         if b <= chunk:
@@ -144,7 +150,8 @@ def _tier_log_masses(child_ax_w, child_ax_c, child_gc, child_moms,
 
 
 def descend(structure: OctreeStructure, levels: List[LevelData],
-            key: jax.Array, cfg: FMMConfig) -> jnp.ndarray:
+            key: jax.Array, cfg: FMMConfig,
+            backend: str = "reference") -> jnp.ndarray:
     """Run the full descent; returns (8^depth,) target leaf id per source
     leaf box (-1 where the leaf holds no vacant axons)."""
     depth = structure.depth
@@ -173,7 +180,7 @@ def descend(structure: OctreeStructure, levels: List[LevelData],
         log_mass = _tier_log_masses(
             nxt.ax_w[occ], nxt.ax_c[occ], nxt.gc[occ], nxt.moms[occ],
             nxt.den_w[tc], nxt.den_c[tc], nxt.gc[tc], nxt.herm[tc],
-            cfg, valid)
+            cfg, valid, backend=backend)
 
         log_mass = jnp.where(nxt.den_w[tc] > 0, log_mass, NEG_INF)
         gumbel = jax.random.gumbel(jax.random.fold_in(key, l + 1),
@@ -190,7 +197,8 @@ def descend(structure: OctreeStructure, levels: List[LevelData],
 
 def descend_level_partial(structure: OctreeStructure, spans, rank: jnp.ndarray,
                           level: int, nxt: LevelData, tgt: jnp.ndarray,
-                          key: jax.Array, cfg: FMMConfig) -> jnp.ndarray:
+                          key: jax.Array, cfg: FMMConfig,
+                          backend: str = "reference") -> jnp.ndarray:
     """One level of the owner-span-sharded descent (DESIGN.md §10).
 
     Scores and Gumbel-samples ONLY this device's owned occupied source boxes
@@ -230,7 +238,7 @@ def descend_level_partial(structure: OctreeStructure, spans, rank: jnp.ndarray,
     log_mass = _tier_log_masses(
         nxt.ax_w[occ], nxt.ax_c[occ], nxt.gc[occ], nxt.moms[occ],
         nxt.den_w[tc], nxt.den_c[tc], nxt.gc[tc], nxt.herm[tc],
-        cfg, valid)
+        cfg, valid, backend=backend)
 
     log_mass = jnp.where(nxt.den_w[tc] > 0, log_mass, NEG_INF)
     choice = jnp.argmax(log_mass + gumbel, axis=-1).astype(jnp.int32)
@@ -247,7 +255,7 @@ def descend_level_partial(structure: OctreeStructure, spans, rank: jnp.ndarray,
 
 def descend_sharded(structure: OctreeStructure, spans, rank: jnp.ndarray,
                     levels: List[LevelData], key: jax.Array, cfg: FMMConfig,
-                    merge) -> jnp.ndarray:
+                    merge, backend: str = "reference") -> jnp.ndarray:
     """The full descent with per-level owner-span sharding (DESIGN.md §10).
 
     merge: callable summing a (8^level,) int32 partial across ranks —
@@ -262,7 +270,8 @@ def descend_sharded(structure: OctreeStructure, spans, rank: jnp.ndarray,
     tgt = jnp.where(active, tgt, -1)
     for level in range(1, structure.depth + 1):
         partial = descend_level_partial(structure, spans, rank, level,
-                                        levels[level], tgt, key, cfg)
+                                        levels[level], tgt, key, cfg,
+                                        backend=backend)
         tgt = merge(partial) - 1
     return tgt
 
@@ -338,10 +347,10 @@ def resolve_leaf_partners(structure: OctreeStructure,
 def find_partners(structure: OctreeStructure, levels: List[LevelData],
                   positions: jnp.ndarray, ax_vac: jnp.ndarray,
                   den_vac: jnp.ndarray, key: jax.Array,
-                  cfg: FMMConfig) -> jnp.ndarray:
+                  cfg: FMMConfig, backend: str = "reference") -> jnp.ndarray:
     """Alg. 1 `find_synapses` (choice phase): per-neuron partner requests."""
     k1, k2 = jax.random.split(key)
-    tgt_leaf = descend(structure, levels, k1, cfg)
+    tgt_leaf = descend(structure, levels, k1, cfg, backend=backend)
     my_tgt = tgt_leaf[jnp.asarray(structure.leaf_of)]
     return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
                                  my_tgt, k2, cfg)
@@ -352,7 +361,8 @@ def find_partners_sharded(structure: OctreeStructure, spans,
                           positions: jnp.ndarray, ax_vac: jnp.ndarray,
                           den_vac: jnp.ndarray, key: jax.Array,
                           cfg: FMMConfig, merge, *, row_start: jnp.ndarray,
-                          row_count: int) -> jnp.ndarray:
+                          row_count: int,
+                          backend: str = "reference") -> jnp.ndarray:
     """Sharded `find_synapses`: owner-span descent + local-row leaf resolve.
 
     Returns the (row_count,) partner requests of the neuron rows
@@ -361,7 +371,8 @@ def find_partners_sharded(structure: OctreeStructure, spans,
     merge: the per-level descent-map reducer (see `descend_sharded`).
     """
     k1, k2 = jax.random.split(key)
-    tgt_leaf = descend_sharded(structure, spans, rank, levels, k1, cfg, merge)
+    tgt_leaf = descend_sharded(structure, spans, rank, levels, k1, cfg, merge,
+                               backend=backend)
     leaf_ids = jax.lax.dynamic_slice_in_dim(
         jnp.asarray(structure.leaf_of, jnp.int32), row_start, row_count)
     my_tgt = tgt_leaf[leaf_ids]

@@ -31,7 +31,11 @@ def _kernel(x_ref, refrac_ref, ca_ref, syn_ref, u_ref,
     refrac = refrac_ref[...]
     ca = ca_ref[...]
 
-    x_new = x + (x0 - x) * (1.0 / tau_x) + background + w_syn * syn_ref[...]
+    # Divide (not multiply by a reciprocal): ref.msp_update and
+    # msp.step_neurons divide, and the ulp difference of 1/tau_x would flip
+    # marginal spike draws (u < x) — the engine-level parity contract is
+    # bitwise on the spike stream (DESIGN.md §11).
+    x_new = x + (x0 - x) / tau_x + background + w_syn * syn_ref[...]
     spiked = (u_ref[...] < x_new) & (refrac <= 0)
     spk_f = spiked.astype(x.dtype)
 

@@ -22,6 +22,18 @@ from repro.kernels import msp_update as _msp
 from repro.kernels import ref as _ref
 
 
+# Engine-facing backend names (EngineConfig.backend, DESIGN.md §11).
+BACKENDS = ("reference", "pallas", "auto")
+
+
+def use_pallas_flag(backend: str) -> Optional[bool]:
+    """Map an EngineConfig.backend string onto the `use_pallas` tri-state."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"backend must be one of {BACKENDS}, got {backend!r}")
+    return {"reference": False, "pallas": True, "auto": None}[backend]
+
+
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 

@@ -1,0 +1,120 @@
+"""tools/check_bench_trajectory.py: the perf-trajectory regression gate.
+
+Exercises the gate on synthetic result trees — pass, warn band, >2x fail,
+the *per_s rate exclusion, the sub-noise-floor skip, the --exclude-pr
+self-comparison guard, and the no-baseline first-PR case.  The real gate
+runs in the CI bench-smoke job right after benchmarks.run (DESIGN.md §11).
+"""
+import importlib.util
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "check_bench_trajectory",
+    os.path.join(ROOT, "tools", "check_bench_trajectory.py"))
+gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gate)
+
+
+def _write(tmp_path, name, payload):
+    path = tmp_path / name
+    path.write_text(json.dumps(payload))
+    return path
+
+
+def _setup(tmp_path, baseline_results, fresh_results, pr="5"):
+    tdir = tmp_path / "trajectory"
+    tdir.mkdir()
+    _write(tdir, f"BENCH_{pr}.json",
+           {"pr": pr, "quick": True, "results": baseline_results})
+    results = _write(tmp_path, "bench_results.json", fresh_results)
+    return ["--results", str(results), "--trajectory-dir", str(tdir)]
+
+
+def test_time_metrics_selects_times_not_rates():
+    tree = {"fig": {"_wall_s": 3.0, "seq_s": 0.4, "replicas_per_s": 20.0,
+                    "nested": {"update_step_s": 0.2}, "bitwise": True,
+                    "note_s": "not a number"}}
+    got = dict(gate.time_metrics(tree))
+    assert got == {"fig._wall_s": 3.0, "fig.seq_s": 0.4,
+                   "fig.nested.update_step_s": 0.2}
+
+
+def test_passes_when_flat(tmp_path):
+    res = {"fig": {"_wall_s": 3.0, "seq_s": 0.4}}
+    assert gate.main(_setup(tmp_path, res, res)) == 0
+
+
+def test_warn_band_does_not_fail(tmp_path, capsys):
+    base = {"fig": {"_wall_s": 3.0}}
+    fresh = {"fig": {"_wall_s": 4.5}}  # 1.5x: warn, not fail
+    assert gate.main(_setup(tmp_path, base, fresh)) == 0
+    assert "WARN" in capsys.readouterr().out
+
+
+def test_fails_above_2x(tmp_path, capsys):
+    base = {"fig": {"_wall_s": 3.0}}
+    fresh = {"fig": {"_wall_s": 6.5}}
+    assert gate.main(_setup(tmp_path, base, fresh)) == 1
+    assert "fig._wall_s" in capsys.readouterr().err
+
+
+def test_noise_floor_skips_tiny_baselines(tmp_path):
+    base = {"fig": {"pyramid_s": 0.003}}
+    fresh = {"fig": {"pyramid_s": 0.030}}  # 10x, but below 50ms floor
+    assert gate.main(_setup(tmp_path, base, fresh)) == 0
+
+
+def test_rate_regression_is_not_a_time_regression(tmp_path):
+    base = {"fig": {"replicas_per_s": 40.0}}
+    fresh = {"fig": {"replicas_per_s": 400.0}}  # 10x MORE throughput
+    assert gate.main(_setup(tmp_path, base, fresh)) == 0
+
+
+def test_exclude_pr_skips_run_under_test(tmp_path):
+    """run.py writes BENCH_<pr>.json before the gate runs; --exclude-pr
+    must keep the gate from comparing the run to itself."""
+    args = _setup(tmp_path, {"fig": {"_wall_s": 9.0}},
+                  {"fig": {"_wall_s": 9.0}}, pr="6")
+    # the only baseline IS pr 6 -> excluded -> no baseline -> pass
+    assert gate.main(args + ["--exclude-pr", "6"]) == 0
+    # and an older entry is still found and compared
+    tdir = tmp_path / "trajectory"
+    _write(tdir, "BENCH_5.json",
+           {"pr": "5", "quick": True, "results": {"fig": {"_wall_s": 3.0}}})
+    assert gate.main(args + ["--exclude-pr", "6"]) == 1
+
+
+def test_latest_baseline_orders_numerically(tmp_path):
+    tdir = tmp_path / "trajectory"
+    tdir.mkdir()
+    for pr in ("2", "10", "9"):
+        _write(tdir, f"BENCH_{pr}.json", {"pr": pr, "results": {}})
+    assert gate.latest_baseline(tdir, None).name == "BENCH_10.json"
+    assert gate.latest_baseline(tdir, "10").name == "BENCH_9.json"
+
+
+def test_no_baseline_passes(tmp_path):
+    results = _write(tmp_path, "bench_results.json", {"fig": {"_wall_s": 1}})
+    tdir = tmp_path / "trajectory"
+    tdir.mkdir()
+    assert gate.main(["--results", str(results),
+                      "--trajectory-dir", str(tdir)]) == 0
+
+
+def test_missing_results_file_fails(tmp_path):
+    assert gate.main(["--results", str(tmp_path / "nope.json"),
+                      "--trajectory-dir", str(tmp_path)]) == 1
+
+
+def test_gate_against_committed_trajectory():
+    """The real committed trajectory must parse and yield time metrics —
+    guards the BENCH_*.json schema the gate depends on."""
+    tdir = os.path.join(ROOT, "benchmarks", "trajectory")
+    latest = gate.latest_baseline(gate.Path(tdir), None)
+    assert latest is not None, "no committed BENCH_*.json trajectory entry"
+    results = json.loads(latest.read_text())["results"]
+    assert dict(gate.time_metrics(results)), \
+        f"{latest.name} has no *_s time metrics"

@@ -58,6 +58,31 @@ def test_msp_update_kernel_property(seed):
                                    rtol=1e-6, atol=1e-7)
 
 
+def test_msp_update_kernel_bitwise():
+    """The fused kernel must be BITWISE equal to the reference phase-1 math
+    (same division by tau_x, same blend order): the engine-level parity
+    contract (tests/test_backend_parity.py, DESIGN.md §11) rides on the
+    spike draw `u < x` never flipping between backends.
+
+    Both paths run under jit, as the engine always invokes them — eager
+    op-by-op execution skips XLA's fused-expression FMA contraction and
+    differs from EITHER jitted path in the last ulp."""
+    import jax
+    rng = np.random.default_rng(11)
+    n = 1000
+    x = jnp.array(rng.uniform(0, 0.2, n), jnp.float32)
+    refrac = jnp.array(rng.integers(0, 5, n), jnp.int32)
+    ca = jnp.array(rng.uniform(0, 1, n), jnp.float32)
+    syn = jnp.array(rng.integers(0, 4, n), jnp.float32)
+    u = jnp.array(rng.uniform(0, 1, n), jnp.float32)
+    cfg = MSPConfig.calibrated(speedup=100.0)
+    run = lambda use_pallas: jax.jit(
+        lambda *a: ops.msp_update(*a, cfg, use_pallas=use_pallas)
+    )(x, refrac, ca, syn, u)
+    for ai, bi in zip(run(True), run(False)):
+        np.testing.assert_array_equal(np.asarray(ai), np.asarray(bi))
+
+
 @pytest.mark.parametrize("b", [1, 63, 512, 700])
 def test_m2l_kernel_shapes(b):
     rng = np.random.default_rng(b)

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Perf-trajectory regression gate for the CI bench-smoke job.
+
+Compares a fresh ``bench_results.json`` (produced by
+``python -m benchmarks.run --quick ...``) against the most recent committed
+trajectory entry ``benchmarks/trajectory/BENCH_<pr>.json`` and fails if any
+shared wall-time metric regressed by more than ``--fail-ratio`` (default
+2x).  Ratios between ``--warn-ratio`` (default 1.2x) and the fail threshold
+are printed as warnings but do not fail the job — quick-size wall times on
+a shared CI box are noisy, so the gate only catches step-function
+regressions (an accidental interpret-mode default, a lost jit cache, a
+kernel routed through a Python loop), not percent-level drift.  Thresholds
+are documented in benchmarks/README.md "Perf trajectory".
+
+Metric selection: every nested numeric value whose key is ``_wall_s`` or
+ends in ``_s`` — excluding ``*per_s`` keys, which are throughput rates
+where bigger is better, not times.  Only metrics present in BOTH files are
+compared (figures come and go across PRs), and baselines below
+``--min-baseline-s`` are skipped as noise-dominated.
+
+``--exclude-pr`` matters: ``run.py --pr N`` writes ``BENCH_N.json`` BEFORE
+this check runs, so without it the freshest baseline would be the run under
+test and the gate would vacuously pass by comparing it to itself.
+
+    python tools/check_bench_trajectory.py --exclude-pr 6
+
+Exit codes: 0 = ok (including "no baseline yet"), 1 = regression or a
+missing/unreadable results file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+BENCH_NAME = re.compile(r"^BENCH_(\d+)\.json$")
+
+
+def time_metrics(node, path=""):
+    """Yield (dotted_path, value) for every wall-time metric in a result
+    tree: keys named `_wall_s` or ending `_s`, minus `*per_s` rates."""
+    if isinstance(node, dict):
+        for key, val in node.items():
+            sub = f"{path}.{key}" if path else str(key)
+            if (isinstance(val, (int, float)) and not isinstance(val, bool)
+                    and (key == "_wall_s"
+                         or (key.endswith("_s")
+                             and not key.endswith("per_s")))):
+                yield sub, float(val)
+            else:
+                yield from time_metrics(val, sub)
+
+
+def latest_baseline(trajectory_dir: Path, exclude_pr: str | None):
+    """Highest-numbered BENCH_<n>.json, skipping the run under test."""
+    best = None
+    for path in trajectory_dir.glob("BENCH_*.json"):
+        m = BENCH_NAME.match(path.name)
+        if not m:
+            continue
+        if exclude_pr is not None and m.group(1) == str(exclude_pr):
+            continue
+        if best is None or int(m.group(1)) > best[0]:
+            best = (int(m.group(1)), path)
+    return best[1] if best else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", default="bench_results.json",
+                    help="fresh results file from benchmarks.run")
+    ap.add_argument("--trajectory-dir",
+                    default=str(Path(__file__).resolve().parent.parent
+                                / "benchmarks" / "trajectory"))
+    ap.add_argument("--exclude-pr", default=None,
+                    help="PR id whose BENCH_<id>.json is the run under test "
+                         "(never a baseline)")
+    ap.add_argument("--fail-ratio", type=float, default=2.0)
+    ap.add_argument("--warn-ratio", type=float, default=1.2)
+    ap.add_argument("--min-baseline-s", type=float, default=0.05,
+                    help="skip metrics whose baseline is below this "
+                         "(noise-dominated sub-50ms timings)")
+    args = ap.parse_args(argv)
+
+    results_path = Path(args.results)
+    if not results_path.is_file():
+        print(f"FAIL: no results file at {results_path}", file=sys.stderr)
+        return 1
+    fresh = json.loads(results_path.read_text())
+
+    baseline_path = latest_baseline(Path(args.trajectory_dir),
+                                    args.exclude_pr)
+    if baseline_path is None:
+        print("trajectory gate: no committed baseline BENCH_*.json "
+              "(first PR?) — nothing to compare, passing.")
+        return 0
+    baseline = json.loads(baseline_path.read_text()).get("results", {})
+
+    fresh_metrics = dict(time_metrics(fresh))
+    base_metrics = dict(time_metrics(baseline))
+    shared = sorted(set(fresh_metrics) & set(base_metrics))
+
+    failures, warnings, compared = [], [], 0
+    for key in shared:
+        base = base_metrics[key]
+        now = fresh_metrics[key]
+        if base < args.min_baseline_s:
+            continue
+        compared += 1
+        ratio = now / base
+        line = f"{key}: {base:.3f}s -> {now:.3f}s ({ratio:.2f}x)"
+        if ratio > args.fail_ratio:
+            failures.append(line)
+        elif ratio > args.warn_ratio:
+            warnings.append(line)
+
+    print(f"trajectory gate: baseline {baseline_path.name}, "
+          f"{len(shared)} shared time metrics, {compared} above the "
+          f"{args.min_baseline_s}s noise floor.")
+    for line in warnings:
+        print(f"  WARN  (> {args.warn_ratio}x): {line}")
+    for line in failures:
+        print(f"  FAIL  (> {args.fail_ratio}x): {line}", file=sys.stderr)
+    if failures:
+        print(f"FAIL: {len(failures)} metric(s) regressed more than "
+              f"{args.fail_ratio}x vs {baseline_path.name}",
+              file=sys.stderr)
+        return 1
+    print("trajectory gate: ok.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
