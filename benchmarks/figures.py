@@ -27,6 +27,10 @@ host-CPU and feed the relative-scaling claims only.
                         vs the kernels/ref.py oracle vs the wired core path,
                         per tier and per size, with parity checks and
                         analytic roofline numbers (DESIGN.md §11)
+  fig_probes            probe overhead: probe-attached chunked runs (raster
+                        + calcium + turnover, chunk-size sweep) vs the
+                        probe-free loop, with bitwise-purity canaries
+                        (core/probes.py, DESIGN.md §12)
 """
 from __future__ import annotations
 
@@ -697,4 +701,76 @@ def fig_kernels(gauss_sizes=((512, 2048), (2048, 8192)),
             state, syn, u, ref_out=ref_out, rtol=1e-6, atol=1e-7)
         roof(entry, flops_model.kernel_cost_msp_update(n))
         out["msp_update"][str(n)] = entry
+    return out
+
+
+def fig_probes(n=400, steps=1200, chunk_sizes=(64, 256), reps=2) -> Dict:
+    """Probe overhead: probed chunked runs vs the probe-free loop.
+
+    Attaches the full probe stack (spike raster + per-neuron calcium +
+    4-region synapse turnover, core/probes.py) and drives the run through
+    `simulate_chunked` at each chunk size, flushing every chunk to disk;
+    the baseline is the same engine's probe-free `simulate`.  Headline:
+    overhead_x per chunk size (probed wall / probe-free wall, best of
+    `reps`, compile excluded both ways).  Small chunks flush (and cross the
+    host/jit boundary) more often, so overhead falls as the chunk grows —
+    the chunk-size knob is exactly that trade (DESIGN.md §12).
+
+    Bitwise canaries ride along: the probed StepRecord streams must equal
+    the probe-free ones, and the on-disk trajectory must be contiguous with
+    raster row sums matching spike_rate * n.  Any violation returns an
+    "error" key (nonzero exit in benchmarks.run)."""
+    import shutil
+    import tempfile
+    import jax
+    from repro.core import probes as probes_mod
+
+    eng = _engine(n, "fmm", speedup=200.0, edge_capacity=8)
+    key = jax.random.key(0)
+    state0 = eng.init_state()
+    region = (np.arange(n) % 4).astype(np.int32)
+
+    # probe-free baseline (compile excluded)
+    jax.block_until_ready(eng.simulate(state0, key, steps)[1].calcium_mean)
+    base_walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _, ref_recs = eng.simulate(state0, key, steps)
+        jax.block_until_ready(ref_recs.calcium_mean)
+        base_walls.append(time.perf_counter() - t0)
+    base = min(base_walls)
+    ref_rate = np.asarray(ref_recs.spike_rate)
+
+    out: Dict = {"n": n, "steps": steps, "probe_free_s": base,
+                 "chunks": {}}
+    for chunk in chunk_sizes:
+        pset = probes_mod.ProbeSet(
+            (probes_mod.SpikeRasterProbe(), probes_mod.CalciumProbe(),
+             probes_mod.TurnoverProbe(region, 4)), chunk_size=chunk)
+        entry = {"chunk_size": chunk, "flushes": -(-steps // chunk)}
+        walls = []
+        for _ in range(reps + 1):      # rep 0 compiles; exclude it
+            out_dir = tempfile.mkdtemp(prefix=f"fig_probes_{chunk}_")
+            t0 = time.perf_counter()
+            _, recs, _ = probes_mod.simulate_chunked(
+                eng, state0, key, steps, pset, out_dir=out_dir)
+            walls.append(time.perf_counter() - t0)
+            try:
+                for name in ("num_synapses", "calcium_mean", "calcium_std",
+                             "spike_rate"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(recs, name)),
+                        np.asarray(getattr(ref_recs, name)), err_msg=name)
+                st, raster = probes_mod.read_trajectory(out_dir, "spikes")
+                np.testing.assert_array_equal(st, np.arange(1, steps + 1))
+                np.testing.assert_array_equal(
+                    raster.sum(axis=1),
+                    np.round(ref_rate * n).astype(int))
+            except AssertionError as e:
+                entry["error"] = f"purity canary failed: {e}"
+            finally:
+                shutil.rmtree(out_dir, ignore_errors=True)
+        entry["probed_s"] = min(walls[1:])
+        entry["overhead_x"] = entry["probed_s"] / base
+        out["chunks"][str(chunk)] = entry
     return out

@@ -41,6 +41,7 @@ QUICK = {
                              depth=2),
     "fig_kernels": dict(gauss_sizes=((256, 1024),), m2l_sizes=(2048,),
                         msp_sizes=(65536,), reps=2),
+    "fig_probes": dict(n=160, steps=400, chunk_sizes=(50, 200), reps=1),
 }
 
 
@@ -133,6 +134,14 @@ def main() -> None:
                 + ";msp_ref_s="
                 + "/".join(f"{v['ref_s']:.4f}"
                            for v in r["msp_update"].values())]))
+    run("fig_probes", figures.fig_probes,
+        lambda r: ";".join(
+            [f"error@{c}={str(v['error'])[:40]}"
+             for c, v in r["chunks"].items() if "error" in v]
+            or ["overhead_x="
+                + "/".join(f"{v['overhead_x']:.2f}"
+                           for v in r["chunks"].values())
+                + f";probe_free_s={r['probe_free_s']:.2f}"]))
 
     with open("bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)

@@ -1,0 +1,135 @@
+"""Mid-run lesion scenario: ablate a cortical slab, watch rewiring heal it.
+
+    PYTHONPATH=src python examples/lesion.py          # ~20 s on CPU
+    PYTHONPATH=src python examples/lesion.py --tiny   # CI smoke sizes
+
+The paper motivates structural plasticity with *healing after brain
+lesions*: kill a region's neurons and the MSP's homeostatic rewiring grows
+the network back around (and through) the gap.  This script is the probe
+subsystem's first scenario (DESIGN.md §12; walkthrough in docs/probes.md):
+
+  1. grow a network of three slabs (left | middle | right along x) until
+     well connected, recording spikes/calcium/per-region turnover through
+     `probes.simulate_chunked`;
+  2. lesion the middle slab with `probes.apply_lesion` — every middle
+     neuron's state zeroed, every synapse touching it killed;
+  3. keep simulating with the same probe stream: survivors see vacancies
+     and rewire, the lesioned slab regrows from silence, and the turnover
+     probe shows the post-lesion birth wave per region.
+
+The companion regression test (tests/test_scenarios.py) asserts the
+healing signature on this exact run: middle-touching synapses drop to zero
+at the lesion and reconnect afterwards, and left<->right connections
+across the gap exceed their pre-lesion count.
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import probes
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+
+NUM_REGIONS = 3
+LESIONED = 1  # the middle slab
+
+
+def build(n: int = 240, seed: int = 0, speedup: float = 200.0):
+    """Engine + 3-slab region labels (0 left, 1 middle, 2 right along x)."""
+    rng = np.random.default_rng(seed)
+    positions = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+    engine = PlasticityEngine(
+        positions,
+        msp_cfg=MSPConfig.calibrated(speedup=speedup),
+        fmm_cfg=FMMConfig(c1=8, c2=8),
+        engine_cfg=EngineConfig(method="fmm"),
+    )
+    x = engine.positions_np[:, 0]
+    region = np.digitize(x, [1000.0 / 3, 2000.0 / 3]).astype(np.int32)
+    return engine, region
+
+
+def connection_counts(engine, state, region) -> dict:
+    """total / middle-touching / cross-gap (left<->right) synapse counts."""
+    src = np.asarray(state.edges.src)
+    dst = np.asarray(state.edges.dst)
+    valid = np.asarray(state.edges.valid)
+    rs, rd = region[src], region[dst]
+    cross = valid & (((rs == 0) & (rd == 2)) | ((rs == 2) & (rd == 0)))
+    mid = valid & ((rs == LESIONED) | (rd == LESIONED))
+    return dict(total=int(valid.sum()), mid_touching=int(mid.sum()), cross_gap=int(cross.sum()))
+
+
+def run(
+    n: int = 240,
+    steps_pre: int = 2000,
+    steps_post: int = 3000,
+    chunk: int = 500,
+    seed: int = 0,
+    speedup: float = 200.0,
+    out_dir=None,
+) -> dict:
+    """Grow -> lesion the middle slab -> regrow; returns the healing stats."""
+    engine, region = build(n, seed, speedup)
+    pset = probes.ProbeSet(
+        (
+            probes.SpikeRasterProbe(),
+            probes.CalciumProbe(),
+            probes.TurnoverProbe(region, NUM_REGIONS),
+        ),
+        chunk_size=chunk,
+    )
+    out_dir = out_dir or tempfile.mkdtemp(prefix="lesion_probes_")
+    key = jax.random.key(seed)
+    state = engine.init_state()
+
+    state, recs_pre, ps = probes.simulate_chunked(
+        engine, state, key, steps_pre, pset, out_dir=out_dir
+    )
+    pre = connection_counts(engine, state, region)
+
+    state = probes.apply_lesion(state, jnp.asarray(region == LESIONED))
+    at_lesion = connection_counts(engine, state, region)
+
+    state, recs_post, ps = probes.simulate_chunked(
+        engine, state, key, steps_post, pset, out_dir=out_dir, probe_state=ps
+    )
+    post = connection_counts(engine, state, region)
+
+    steps, turnover = probes.read_trajectory(out_dir, "turnover")
+    post_rows = steps > steps_pre
+    births_mid = int(turnover[post_rows, 0, LESIONED].sum())
+    return dict(
+        pre=pre,
+        at_lesion=at_lesion,
+        post=post,
+        births_mid_post=births_mid,
+        out_dir=out_dir,
+        calcium_end=float(np.asarray(recs_post.calcium_mean)[-1]),
+        region=region,
+        steps_pre=steps_pre,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true", help="CI smoke sizes (~10 s)")
+    args = ap.parse_args()
+    kw = dict(n=160, steps_pre=1000, steps_post=1500, chunk=250, speedup=400.0) if args.tiny else {}
+    res = run(**kw)
+    print(f"pre-lesion : {res['pre']}")
+    print(f"at lesion  : {res['at_lesion']}   (middle slab ablated)")
+    print(f"post-heal  : {res['post']}")
+    print(f"middle-slab births after lesion: {res['births_mid_post']}")
+    print(f"probe chunks in {res['out_dir']}")
+    healed = res["post"]["mid_touching"] > 0
+    print("healed across the lesion" if healed else "NOT healed (bug?)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Topographic-map scenario: kernel width sets the wiring's spatial order.
+
+    PYTHONPATH=src python examples/topographic_map.py          # ~25 s on CPU
+    PYTHONPATH=src python examples/topographic_map.py --tiny   # CI smoke
+
+The paper's probability kernel K(x, y) = exp(-|x - y|^2 / sigma^2) is the
+only distance-dependent term in the MSP, so sigma alone decides how
+*topographic* the grown network is.  This script runs the same neuron
+cloud twice — a narrow kernel (sigma = 150 um) against the paper's default
+wide one (sigma = 750 um) — with a probe stream attached
+(DESIGN.md §12; walkthrough in docs/probes.md), and measures two map
+statistics on the final synapse table:
+
+  mean_dist  mean source->target Euclidean distance of live synapses;
+  x_corr     Pearson correlation between source and target x coordinates
+             (a crude retinotopy index: 1.0 = perfectly place-preserving).
+
+Narrow kernels wire neighbours (short edges, high x_corr); wide kernels
+wire almost uniformly (long edges, x_corr near 0).  The regression test in
+tests/test_scenarios.py pins exactly this ordering.
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+import jax
+
+from repro.core import probes
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+
+SIGMA_NARROW = 150.0
+SIGMA_WIDE = 750.0
+
+
+def map_statistics(positions: np.ndarray, state) -> dict:
+    """Edge count, mean edge length and src/dst x-correlation."""
+    src = np.asarray(state.edges.src)
+    dst = np.asarray(state.edges.dst)
+    valid = np.asarray(state.edges.valid)
+    d = np.linalg.norm(positions[src] - positions[dst], axis=-1)[valid]
+    xs, xd = positions[src, 0][valid], positions[dst, 0][valid]
+    return dict(
+        edges=int(valid.sum()),
+        mean_dist=float(d.mean()),
+        x_corr=float(np.corrcoef(xs, xd)[0, 1]),
+    )
+
+
+def run_one(
+    sigma: float,
+    n: int = 240,
+    steps: int = 2500,
+    seed: int = 0,
+    speedup: float = 200.0,
+    chunk: int = 500,
+    out_dir=None,
+) -> dict:
+    """Grow one network at kernel width `sigma`, probed; return map stats."""
+    rng = np.random.default_rng(seed)
+    positions = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+    engine = PlasticityEngine(
+        positions,
+        msp_cfg=MSPConfig.calibrated(speedup=speedup),
+        fmm_cfg=FMMConfig(c1=8, c2=8, sigma=sigma),
+        engine_cfg=EngineConfig(method="fmm"),
+    )
+    pset = probes.ProbeSet((probes.SpikeRasterProbe(), probes.CalciumProbe()), chunk_size=chunk)
+    out_dir = out_dir or tempfile.mkdtemp(prefix=f"topo_{int(sigma)}_")
+    state, recs, _ = probes.simulate_chunked(
+        engine, engine.init_state(), jax.random.key(seed), steps, pset, out_dir=out_dir
+    )
+    stats = map_statistics(engine.positions_np, state)
+    stats["out_dir"] = out_dir
+    stats["calcium_end"] = float(np.asarray(recs.calcium_mean)[-1])
+    return stats
+
+
+def run(
+    n: int = 240,
+    steps: int = 2500,
+    seed: int = 0,
+    speedup: float = 200.0,
+    chunk: int = 500,
+) -> dict:
+    """Narrow-vs-wide kernel comparison; returns {sigma: stats}."""
+    return {
+        sigma: run_one(sigma, n=n, steps=steps, seed=seed, speedup=speedup, chunk=chunk)
+        for sigma in (SIGMA_NARROW, SIGMA_WIDE)
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true", help="CI smoke sizes (~10 s)")
+    args = ap.parse_args()
+    kw = dict(n=160, steps=1200, speedup=400.0, chunk=300) if args.tiny else {}
+    res = run(**kw)
+    print(f"{'sigma':>6} {'edges':>6} {'mean_dist':>10} {'x_corr':>7}")
+    for sigma, s in res.items():
+        print(f"{sigma:6.0f} {s['edges']:6d} {s['mean_dist']:10.1f} {s['x_corr']:7.3f}")
+    narrow, wide = res[SIGMA_NARROW], res[SIGMA_WIDE]
+    ordered = narrow["mean_dist"] < wide["mean_dist"] and narrow["x_corr"] > wide["x_corr"]
+    print("topographic ordering holds" if ordered else "ordering BROKEN?")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,16 @@ with the properties a 1000-node run needs from the *per-process* layer:
 
 At fleet scale each process saves only its parameter shards (addressable
 devices); orchestration of who-writes-what is runtime/failures.py's job.
+
+Probe interaction (DESIGN.md §12): core/probes.ProbeState is an ordinary
+pytree (NamedTuple holding a dict of chunk buffers), so checkpointing a
+probed run is just `save((state, probe_state), step)` with a matching
+(state, probe_state) template on restore — the path keys below handle both
+NamedTuple fields (SequenceKey.idx) and the buffer dict (DictKey.key).  A
+restore mid-chunk resumes recording at the saved cursor; the chunk files
+`probes.simulate_chunked` re-flushes after restore overwrite (not
+duplicate) the partial ones, because files are named by their first
+recorded step.
 """
 from __future__ import annotations
 

@@ -1,3 +1,90 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core simulation package: the MSP + FMM engine and its scaling layers.
+
+The paper's system — the Model of Structural Plasticity with an
+FMM/fast-Gauss-transform connectivity search — plus the beyond-paper
+subsystems grown on top of it (ensembles, the distributed neuron-axis
+decomposition, probes).  Reading map: DESIGN.md §1; per-module contracts
+in each module docstring.
+
+Public surface (re-exported here for convenience; importing the submodule
+directly is equally supported):
+
+  engine        PlasticityEngine, SimState, StepRecord, KernelParams,
+                EngineConfig — the single-device simulation loop
+  msp           MSPConfig, NeuronState — neuron/calcium/element dynamics
+  synapses      SynapseState, insert, insert_span — the slot-table edge
+                store; `insert_span` (PR 5) is the distributed
+                slot-range-owned commit (DESIGN.md §10)
+  octree        build_structure, owner_spans, OwnerSpans — Morton pyramid;
+                `owner_spans` (PR 4/5) maps devices to contiguous
+                per-level neuron ranges (DESIGN.md §9)
+  expansions    LOG_EPS — public log-space weight floor.  Migration note:
+                the deprecated private alias `_LOG_EPS` (kept through
+                PR 5/6) is GONE as of PR 7; spell it `expansions.LOG_EPS`.
+  ensemble      EnsembleEngine, scan_replicas — K replicas, one program
+  distributed   DistributedPlasticityEngine, DistributedEnsembleEngine —
+                the paper's MPI decomposition on a JAX mesh (DESIGN.md §2)
+  probes        ProbeSet, ProbeState, SpikeRasterProbe, CalciumProbe,
+                TurnoverProbe, ProbeWriter, read_trajectory,
+                simulate_chunked, apply_lesion — pure observers over the
+                loop, chunk-recorded under scan (DESIGN.md §12;
+                docs/probes.md)
+"""
+
+from repro.core.engine import (
+    EngineConfig,
+    KernelParams,
+    PlasticityEngine,
+    SimState,
+    StepRecord,
+)
+from repro.core.msp import MSPConfig, NeuronState
+from repro.core.synapses import SynapseState, insert, insert_span
+from repro.core.octree import OwnerSpans, build_structure, owner_spans
+from repro.core.expansions import LOG_EPS
+from repro.core.ensemble import EnsembleEngine, scan_replicas
+from repro.core.distributed import (
+    DistributedEnsembleEngine,
+    DistributedPlasticityEngine,
+)
+from repro.core.probes import (
+    CalciumProbe,
+    ProbeSet,
+    ProbeState,
+    ProbeWriter,
+    SpikeRasterProbe,
+    TurnoverProbe,
+    apply_lesion,
+    read_trajectory,
+    simulate_chunked,
+)
+
+__all__ = [
+    "EngineConfig",
+    "KernelParams",
+    "PlasticityEngine",
+    "SimState",
+    "StepRecord",
+    "MSPConfig",
+    "NeuronState",
+    "SynapseState",
+    "insert",
+    "insert_span",
+    "OwnerSpans",
+    "build_structure",
+    "owner_spans",
+    "LOG_EPS",
+    "EnsembleEngine",
+    "scan_replicas",
+    "DistributedEnsembleEngine",
+    "DistributedPlasticityEngine",
+    "CalciumProbe",
+    "ProbeSet",
+    "ProbeState",
+    "ProbeWriter",
+    "SpikeRasterProbe",
+    "TurnoverProbe",
+    "apply_lesion",
+    "read_trajectory",
+    "simulate_chunked",
+]

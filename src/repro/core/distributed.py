@@ -462,29 +462,53 @@ class DistributedPlasticityEngine(PlasticityEngine):
                             **SHARD_MAP_NO_CHECK)
         return jax.jit(sharded)
 
-    @functools.partial(jax.jit, static_argnums=(0, 3))
+    @functools.partial(jax.jit, static_argnums=(0, 3, 5))
     def simulate(self, state: SimState, key: jax.Array, num_steps: int,
-                 params: Optional[KernelParams] = None
-                 ) -> Tuple[SimState, StepRecord]:
+                 params: Optional[KernelParams] = None,
+                 probes=None, probe_state=None):
+        """Scan `num_steps` sharded steps; optionally record probes.
+
+        Probe recording is OWNER-SPAN LOCAL (DESIGN.md §12): row probes'
+        buffers are sharded over the data axis (each device writes only its
+        owned neuron rows — no gather), while `needs_merge` probes (synapse
+        turnover, whose inputs are slot-range-sharded) record an exact
+        integer psum of per-device partials.  Both make the recorded rows —
+        and, probes being pure observers, the (state, recs) results —
+        bitwise identical to `PlasticityEngine.simulate` for any shard
+        count.  Returns (state, recs) without probes, + probe_state with.
+        """
         state_spec, rec_spec = self._specs()
         param_spec = jax.tree.map(lambda _: P(), params)
+        if probes is not None and probe_state is None:
+            probe_state = probes.init(self.n, start_step=state.step)
+        probe_spec = (rules.probe_state_spec(probes, self.axis)
+                      if probes is not None else None)
 
-        def local_sim(st, k, pr):
+        def local_sim(st, k, pr, ps):
+            merge = lambda x: jax.lax.psum(x, self.axis)
+
             def body(carry, i):
-                s, = carry
+                s, q = carry
+                prev = s
                 # Fold by the CARRIED global step (see engine.simulate).
                 s, rec = self.local_step(s, jax.random.fold_in(k, s.step),
                                          params=pr)
-                return (s,), rec
-            (st,), recs = jax.lax.scan(body, (st,),
-                                       jnp.arange(num_steps, dtype=jnp.int32))
-            return st, recs
+                if probes is not None:
+                    q = probes.record(q, prev, s, rec, merge=merge)
+                return (s, q), rec
+            (st, ps), recs = jax.lax.scan(
+                body, (st, ps), jnp.arange(num_steps, dtype=jnp.int32))
+            return st, ps, recs
 
         sharded = shard_map(local_sim, mesh=self.mesh,
-                            in_specs=(state_spec, P(), param_spec),
-                            out_specs=(state_spec, rec_spec),
+                            in_specs=(state_spec, P(), param_spec,
+                                      probe_spec),
+                            out_specs=(state_spec, probe_spec, rec_spec),
                             **SHARD_MAP_NO_CHECK)
-        return sharded(state, key, params)
+        state, probe_state, recs = sharded(state, key, params, probe_state)
+        if probes is None:
+            return state, recs
+        return state, recs, probe_state
 
 
 class DistributedEnsembleEngine:
@@ -542,16 +566,22 @@ class DistributedEnsembleEngine:
             lambda x: jnp.broadcast_to(x, (num_replicas,) + x.shape), base)
 
     # -- batched + sharded simulation ---------------------------------------
-    @functools.partial(jax.jit, static_argnums=(0, 3))
+    @functools.partial(jax.jit, static_argnums=(0, 3, 5))
     def simulate(self, states: SimState, keys: jax.Array, num_steps: int,
-                 params: Optional[KernelParams] = None
-                 ) -> Tuple[SimState, StepRecord]:
+                 params: Optional[KernelParams] = None,
+                 probes=None, probe_states=None):
         """Run all replicas `num_steps` steps on the 2-D mesh.
 
         states: (K, ...)-leading SimState (init_states).
         keys:   (K,) typed PRNG key array — one independent stream per replica.
         params: optional (K,)-leading KernelParams (launch/sweep.pack_params).
-        Returns (final states, StepRecord with (num_steps, K) trajectories).
+        probes: optional static core/probes.ProbeSet; probe_states the
+                (K,)-leading carry.  Row probes shard (K, chunk, n) buffers
+                over BOTH axes (replica x neuron — owner-span local,
+                DESIGN.md §12); turnover partials psum over the data axis
+                only.  Pure observers: results are bitwise unchanged.
+        Returns (final states, StepRecord with (num_steps, K) trajectories),
+        plus the final probe states when probes ride along.
         """
         eng = self.engine
         k = states.step.shape[0]
@@ -560,18 +590,31 @@ class DistributedEnsembleEngine:
             raise ValueError(
                 f"the {self.ensemble_axis!r} axis size {k_shards} must "
                 f"divide the replica count {k}")
+        if probes is not None and probe_states is None:
+            probe_states = probes.init(eng.n, start_step=states.step,
+                                       batch=k)
         state_spec = rules.ensemble_sharded_spec(states, self.ensemble_axis,
                                                  eng.axis)
         param_spec = rules.ensemble_spec(params, self.ensemble_axis)
+        probe_spec = (rules.probe_state_spec(
+            probes, eng.axis, ensemble_axis=self.ensemble_axis)
+            if probes is not None else None)
         rec_spec = StepRecord(*(P(None, self.ensemble_axis),)
                               * len(StepRecord._fields))
         step_fn = lambda s, key, pr, upd: eng.local_step(
             s, key, do_update=upd, params=pr)
+        merge = lambda x: jax.lax.psum(x, eng.axis)
         sharded = shard_map(
-            lambda st, ks, pr: scan_replicas(
-                step_fn, st, ks, pr, num_steps, eng.msp_cfg.update_interval),
+            lambda st, ks, pr, ps: scan_replicas(
+                step_fn, st, ks, pr, num_steps, eng.msp_cfg.update_interval,
+                probes=probes, probe_states=ps, merge=merge),
             mesh=self.mesh,
-            in_specs=(state_spec, P(self.ensemble_axis), param_spec),
-            out_specs=(state_spec, rec_spec),
+            in_specs=(state_spec, P(self.ensemble_axis), param_spec,
+                      probe_spec),
+            out_specs=(state_spec, probe_spec, rec_spec),
             **SHARD_MAP_NO_CHECK)
-        return sharded(states, keys, params)
+        states, probe_states, recs = sharded(states, keys, params,
+                                             probe_states)
+        if probes is None:
+            return states, recs
+        return states, recs, probe_states

@@ -252,17 +252,35 @@ class PlasticityEngine:
         return state, rec
 
     # -- whole-simulation scan ----------------------------------------------
-    @functools.partial(jax.jit, static_argnums=(0, 3))
+    @functools.partial(jax.jit, static_argnums=(0, 3, 5))
     def simulate(self, state: SimState, key: jax.Array, num_steps: int,
-                 params: Optional[KernelParams] = None
-                 ) -> Tuple[SimState, StepRecord]:
+                 params: Optional[KernelParams] = None,
+                 probes=None, probe_state=None):
+        """Scan `num_steps` steps; optionally record probes along the way.
+
+        probes/probe_state: a static core/probes.ProbeSet plus its
+        ProbeState carry (probes.init; None = a fresh one started at the
+        state's current step).  Probes are PURE OBSERVERS — the returned
+        (state, recs) are bitwise identical with and without them
+        (DESIGN.md §12) — so the return stays the 2-tuple (state, recs)
+        when probes is None and gains the probe state as a third element
+        otherwise.
+        """
+        if probes is not None and probe_state is None:
+            probe_state = probes.init(self.n, start_step=state.step)
+
         def body(carry, i):
-            st, = carry
+            st, ps = carry
+            prev = st
             # Fold by the CARRIED global step, not the local scan index:
             # identical for a fresh run (step == i), but a chunked/resumed
             # continuation draws fresh streams instead of replaying chunk 0's.
             st, rec = self.step(st, jax.random.fold_in(key, st.step), params)
-            return (st,), rec
-        (state,), recs = jax.lax.scan(body, (state,),
-                                      jnp.arange(num_steps, dtype=jnp.int32))
-        return state, recs
+            if probes is not None:
+                ps = probes.record(ps, prev, st, rec)
+            return (st, ps), rec
+        (state, probe_state), recs = jax.lax.scan(
+            body, (state, probe_state), jnp.arange(num_steps, dtype=jnp.int32))
+        if probes is None:
+            return state, recs
+        return state, recs, probe_state

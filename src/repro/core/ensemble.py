@@ -33,7 +33,7 @@ runs with the same keys on the recorded observables.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +47,7 @@ from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
 
 def scan_replicas(step_fn, states: SimState, keys: jax.Array,
                   params: Optional[KernelParams], num_steps: int,
-                  interval: int):
+                  interval: int, probes=None, probe_states=None, merge=None):
     """The K-replica scan shared by EnsembleEngine (replica axis only) and
     distributed.DistributedEnsembleEngine (replica axis x data axis).
 
@@ -65,19 +65,37 @@ def scan_replicas(step_fn, states: SimState, keys: jax.Array,
         runs the expensive branch every step).  Sequential step checks
         state.step AFTER the increment; st.step[0] + 1 matches that for any
         starting step (chunked/resumed simulate calls included).
+
+    probes/probe_states/merge: optional core/probes recording — a static
+    ProbeSet, its (K,)-leading ProbeState carry, and the engine's data-axis
+    reduction for `needs_merge` probes (None off the 2-D mesh).  Recording
+    happens inside the per-replica vmapped step, so each replica's rows are
+    bitwise identical to a sequential probed run with the same key
+    (DESIGN.md §12).  Returns (states, probe_states, records) — the probe
+    slot is None when no probes ride along.
     """
-    def body(st, i):
+    def body(carry, i):
+        st, ps = carry
         ki = jax.vmap(lambda k: jax.random.fold_in(k, st.step[0]))(keys)
         do_upd = ((st.step[0] + 1) % interval) == 0
-        if params is None:
-            st, rec = jax.vmap(lambda s, k: step_fn(s, k, None, do_upd))(
-                st, ki)
-        else:
-            st, rec = jax.vmap(lambda s, k, p: step_fn(s, k, p, do_upd))(
-                st, ki, params)
-        return st, rec
 
-    return jax.lax.scan(body, states, jnp.arange(num_steps, dtype=jnp.int32))
+        def one(s, k, p, q):
+            prev = s
+            s, rec = step_fn(s, k, p, do_upd)
+            if probes is not None:
+                q = probes.record(q, prev, s, rec, merge=merge)
+            return s, q, rec
+
+        if params is None:
+            st, ps, rec = jax.vmap(lambda s, k, q: one(s, k, None, q))(
+                st, ki, ps)
+        else:
+            st, ps, rec = jax.vmap(one)(st, ki, params, ps)
+        return (st, ps), rec
+
+    (states, probe_states), recs = jax.lax.scan(
+        body, (states, probe_states), jnp.arange(num_steps, dtype=jnp.int32))
+    return states, probe_states, recs
 
 
 class EnsembleEngine:
@@ -114,33 +132,51 @@ class EnsembleEngine:
 
     # -- batched simulation --------------------------------------------------
     def _sim(self, states: SimState, keys: jax.Array,
-             params: Optional[KernelParams], num_steps: int):
+             params: Optional[KernelParams], num_steps: int,
+             probes=None, probe_states=None):
         step_fn = lambda s, k, p, upd: self.engine.step(s, k, p,
                                                         do_update=upd)
         return scan_replicas(step_fn, states, keys, params, num_steps,
-                             self.engine.msp_cfg.update_interval)
+                             self.engine.msp_cfg.update_interval,
+                             probes=probes, probe_states=probe_states)
 
-    @functools.partial(jax.jit, static_argnums=(0, 3))
+    @functools.partial(jax.jit, static_argnums=(0, 3, 5))
     def simulate(self, states: SimState, keys: jax.Array, num_steps: int,
-                 params: Optional[KernelParams] = None
-                 ) -> Tuple[SimState, StepRecord]:
+                 params: Optional[KernelParams] = None,
+                 probes=None, probe_states=None):
         """Run all replicas `num_steps` steps.
 
         states: (K, ...)-leading SimState (init_states).
         keys:   (K,) typed PRNG key array — one independent stream per replica.
         params: optional (K,)-leading KernelParams (launch/sweep.pack_params).
-        Returns (final states, StepRecord with (num_steps, K) trajectories).
+        probes: optional static core/probes.ProbeSet; probe_states the
+                (K,)-leading carry (probes.init(n, batch=K); None = fresh).
+                Pure observers — (states, records) are bitwise unchanged.
+        Returns (final states, StepRecord with (num_steps, K) trajectories),
+        plus the final probe states when probes ride along.
         """
+        if probes is not None and probe_states is None:
+            probe_states = probes.init(self.engine.n,
+                                       start_step=states.step,
+                                       batch=states.step.shape[0])
         if self.mesh is None:
-            return self._sim(states, keys, params, num_steps)
-
-        state_spec = rules.ensemble_spec(states, self.axis)
-        param_spec = rules.ensemble_spec(params, self.axis)
-        rec_spec = StepRecord(*(P(None, self.axis),) * len(StepRecord._fields))
-        sharded = shard_map(
-            lambda st, k, pr: self._sim(st, k, pr, num_steps),
-            mesh=self.mesh,
-            in_specs=(state_spec, P(self.axis), param_spec),
-            out_specs=(state_spec, rec_spec),
-            **SHARD_MAP_NO_CHECK)
-        return sharded(states, keys, params)
+            states, probe_states, recs = self._sim(
+                states, keys, params, num_steps, probes, probe_states)
+        else:
+            state_spec = rules.ensemble_spec(states, self.axis)
+            param_spec = rules.ensemble_spec(params, self.axis)
+            probe_spec = rules.ensemble_spec(probe_states, self.axis)
+            rec_spec = StepRecord(*(P(None, self.axis),)
+                                  * len(StepRecord._fields))
+            sharded = shard_map(
+                lambda st, k, pr, ps: self._sim(st, k, pr, num_steps,
+                                                probes, ps),
+                mesh=self.mesh,
+                in_specs=(state_spec, P(self.axis), param_spec, probe_spec),
+                out_specs=(state_spec, probe_spec, rec_spec),
+                **SHARD_MAP_NO_CHECK)
+            states, probe_states, recs = sharded(states, keys, params,
+                                                 probe_states)
+        if probes is None:
+            return states, recs
+        return states, recs, probe_states

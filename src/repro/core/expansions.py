@@ -227,7 +227,7 @@ def box_mass_taylor(axon_moms, axon_centroid, hermite_coeff,
 # (traversal.resolve_leaf_partners, barnes_hut) clamp vacancy weights with
 # this before taking logs.
 LOG_EPS = 1e-30
-_LOG_EPS = LOG_EPS   # deprecated alias, kept for one release
+# (The pre-PR-5 private alias `_LOG_EPS` has been removed; import LOG_EPS.)
 
 
 def box_mass_direct_log(axon_count, axon_centroid, dendrite_weight,

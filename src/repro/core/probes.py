@@ -1,0 +1,419 @@
+"""Probe subsystem: composable, pure observers over the simulation loop.
+
+The paper motivates structural plasticity with learning and *healing after
+brain lesions*, which are statements about trajectories — yet an engine
+`simulate` only returns the compact `StepRecord` aggregates.  Probes record
+richer per-step observables (spike rasters, per-neuron calcium traces,
+per-region synapse turnover) without touching the simulation itself:
+
+  * **Chunked recording under scan** (DESIGN.md §12): each probe writes one
+    row per step into a fixed-size preallocated buffer via
+    `lax.dynamic_update_index_in_dim`, so recording is pure array math that
+    works inside `jit`/`lax.scan` with no host callbacks.  A host-side
+    driver (`simulate_chunked`) slices the run at chunk boundaries, flushes
+    full chunks to disk (`ProbeWriter`), and resets the cursor — unbounded
+    trajectories with bounded device memory.
+  * **Purity / bitwise contract**: probes only *read* the states the step
+    produced; the scan carries `(SimState, ProbeState)` but the state
+    update never depends on the probe state.  A probe-attached run is
+    bitwise identical — spike streams, synapse counts, float records, final
+    state — to a probe-free run, for the single-device, distributed
+    (any shard count), and ensemble engines (tests/test_probes.py).
+  * **Owner-span locality**: under `DistributedPlasticityEngine`, row
+    probes (`row_sharded=True`) record only the device's owned neuron rows
+    — the buffer's neuron axis is sharded over the data axis
+    (sharding/rules.probe_state_spec), mirroring the PR 4/5 owner-span
+    machinery.  Aggregate probes (synapse turnover) record per-device
+    partials merged by an exact integer `psum`, so their rows are bitwise
+    equal to the single-device values for any shard count.
+  * **Checkpoint interaction**: `ProbeState` is an ordinary pytree (a
+    NamedTuple holding a dict of buffers), so `checkpoint/manager.py`
+    saves/restores it alongside `SimState`.  Restoring mid-chunk resumes
+    recording at the saved cursor; because flushed chunk files are named by
+    their first recorded step, a re-flush after restore *overwrites* the
+    same file instead of duplicating rows (DESIGN.md §12).
+
+The scenario library (examples/lesion.py, examples/topographic_map.py)
+builds on this module; `apply_lesion` is the host-level surgery those
+scenarios use between chunks.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import SimState, StepRecord
+
+
+class ProbeState(NamedTuple):
+    """The recording carry: one fixed-size buffer per probe + a cursor.
+
+    cursor:  () int32 — rows already recorded into the current chunk.
+    step0:   () int32 — global step of the current chunk's FIRST row (rows
+             record post-step state, so a chunk started at engine step s
+             has step0 = s + 1).
+    buffers: probe name -> (chunk_size, *row_shape) array.  Dict-in-
+             NamedTuple is an ordinary pytree, so ProbeState flows through
+             jit/scan/shard_map and checkpoint/manager.py unchanged.
+
+    Batched (ensemble) probe states carry a leading (K,) axis on every
+    leaf, exactly like SimState under core/ensemble.py.
+    """
+
+    cursor: jnp.ndarray
+    step0: jnp.ndarray
+    buffers: Dict[str, jnp.ndarray]
+
+
+class Probe:
+    """Base class: a named, pure observer of one simulation step.
+
+    Subclasses define `row_struct` (shape/dtype of one recorded row) and
+    `observe(prev, new, rec)` -> row.  `observe` must be a pure function of
+    its inputs — probes never feed back into the simulation (the bitwise
+    purity contract, DESIGN.md §12).
+
+    row_sharded: the row's leading dim is the neuron axis, so under the
+        distributed engine each device records only its owned rows (the
+        buffer's neuron dim is sharded over the data axis).
+    needs_merge: `observe` returns a per-device PARTIAL that the engine
+        must reduce over the data axis (exact integer psum) before it is
+        recorded — used by aggregate probes whose inputs (the edge table)
+        are sharded by slot range rather than by neuron.
+    """
+
+    name: str = "probe"
+    row_sharded: bool = False
+    needs_merge: bool = False
+
+    def row_struct(self, n: int) -> jax.ShapeDtypeStruct:
+        raise NotImplementedError
+
+    def observe(self, prev: SimState, new: SimState, rec: StepRecord) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class SpikeRasterProbe(Probe):
+    """(n,) bool per step: which neurons spiked (the raster plot)."""
+
+    name = "spikes"
+    row_sharded = True
+
+    def row_struct(self, n: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((n,), jnp.bool_)
+
+    def observe(self, prev, new, rec):
+        return new.neurons.spiked
+
+
+class CalciumProbe(Probe):
+    """(n,) float32 per step: per-neuron intracellular calcium."""
+
+    name = "calcium"
+    row_sharded = True
+
+    def row_struct(self, n: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def observe(self, prev, new, rec):
+        return new.neurons.calcium
+
+
+class TurnoverProbe(Probe):
+    """(2, R) int32 per step: synapse births/deaths per region.
+
+    region_of: (n,) int region id per GLOBAL neuron id (distributed engines
+    Morton-sort neurons at construction — index by the SORTED order, i.e.
+    `engine.positions_np` rows).  Row 0 counts births, row 1 deaths, keyed
+    by the dendrite-side (dst) neuron's region.
+
+    A slot's edge is compared between the pre- and post-step tables: a slot
+    that flips invalid->valid is a birth, valid->invalid a death, and a
+    valid slot whose (src, dst) changed within one connectivity update is
+    both.  (The one blind spot: an identical edge deleted and re-inserted
+    into the *same slot* within one update cancels out — the slot table
+    cannot distinguish it from no-op.  Host-level surgery such as
+    `apply_lesion` happens between steps and is likewise invisible; the
+    post-surgery rewiring is what the probe shows.)
+
+    Under the distributed engine the edge table is sharded by slot range,
+    so `observe` returns a per-device partial (`needs_merge=True`) that the
+    engine psums — integer-exact, so rows match single-device bitwise.
+    """
+
+    name = "turnover"
+    row_sharded = False
+    needs_merge = True
+
+    def __init__(self, region_of: np.ndarray, num_regions: int, name: str = "turnover"):
+        self.region_of = jnp.asarray(region_of, jnp.int32)
+        self.num_regions = int(num_regions)
+        self.name = name
+
+    def row_struct(self, n: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((2, self.num_regions), jnp.int32)
+
+    def observe(self, prev, new, rec):
+        pe, ne = prev.edges, new.edges
+        same = (pe.src == ne.src) & (pe.dst == ne.dst)
+        born = ne.valid & (~pe.valid | ~same)
+        died = pe.valid & (~ne.valid | ~same)
+        seg = lambda hit, dst: jax.ops.segment_sum(
+            hit.astype(jnp.int32), self.region_of[dst], num_segments=self.num_regions
+        )
+        return jnp.stack([seg(born, ne.dst), seg(died, pe.dst)])
+
+
+class ProbeSet:
+    """An immutable collection of probes + the shared chunk size.
+
+    Passed to `engine.simulate(..., probes=pset, probe_state=ps)` as a
+    STATIC argument (hashable by identity): reuse one instance across calls
+    to share the jit cache.  Probe names must be unique — they key the
+    ProbeState buffer dict and the on-disk arrays.
+    """
+
+    def __init__(self, probes: Sequence[Probe], chunk_size: int = 1000):
+        self.probes = tuple(probes)
+        self.chunk_size = int(chunk_size)
+        if self.chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        names = [p.name for p in self.probes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate probe names: {names}")
+
+    # -- state --------------------------------------------------------------
+    def init(self, n: int, start_step=0, batch: Optional[int] = None) -> ProbeState:
+        """Zeroed buffers; first recorded row will be step `start_step + 1`.
+
+        n:     GLOBAL neuron count (row probes allocate (chunk, n); the
+               distributed engine shards the n axis at its shard_map
+               boundary, each device holding its owner rows).
+        batch: replica count K for ensemble engines — every leaf gains a
+               leading (K,) axis, matching `EnsembleEngine.init_states`.
+        """
+        lead = () if batch is None else (int(batch),)
+        buffers = {}
+        for p in self.probes:
+            s = p.row_struct(n)
+            buffers[p.name] = jnp.zeros(lead + (self.chunk_size,) + s.shape, s.dtype)
+        step0 = jnp.asarray(start_step, jnp.int32) + 1
+        return ProbeState(
+            cursor=jnp.zeros(lead, jnp.int32),
+            step0=jnp.broadcast_to(step0, lead),
+            buffers=buffers,
+        )
+
+    # -- recording (traced; called from the engines' scan bodies) -----------
+    def record(
+        self,
+        ps: ProbeState,
+        prev: SimState,
+        new: SimState,
+        rec: StepRecord,
+        merge: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    ) -> ProbeState:
+        """Append one row per probe at the cursor; pure array math.
+
+        merge: the engine's data-axis reduction (exact integer psum) for
+        `needs_merge` probes; None on single-device/ensemble paths.  The
+        write index is XLA-clamped, so recording past chunk_size silently
+        overwrites the last row — drive chunks with `simulate_chunked` (or
+        flush + `advance` yourself) before the cursor reaches chunk_size.
+        """
+        buffers = dict(ps.buffers)
+        for p in self.probes:
+            row = p.observe(prev, new, rec)
+            if p.needs_merge and merge is not None:
+                row = merge(row)
+            buffers[p.name] = jax.lax.dynamic_update_index_in_dim(
+                buffers[p.name], row.astype(buffers[p.name].dtype), ps.cursor, 0
+            )
+        return ProbeState(cursor=ps.cursor + 1, step0=ps.step0, buffers=buffers)
+
+    # -- chunk bookkeeping (host side) --------------------------------------
+    def advance(self, ps: ProbeState) -> ProbeState:
+        """Start the next chunk: cursor to 0, step0 past the recorded rows.
+
+        Buffers are NOT zeroed — the next chunk overwrites them row by row,
+        and flushes trim to the cursor, so stale tails never leak to disk.
+        """
+        return ProbeState(
+            cursor=jnp.zeros_like(ps.cursor),
+            step0=ps.step0 + ps.cursor,
+            buffers=ps.buffers,
+        )
+
+
+class ProbeWriter:
+    """Flushes chunks to disk: one `chunk_<step0>.npz` per chunk.
+
+    Layout (the on-disk trajectory format, docs/probes.md):
+
+      out_dir/chunk_000000001.npz
+        __step0  () int64   global step of the file's first row
+        __rows   () int64   recorded rows in this file
+        <probe>  (rows, *row_shape) per probe, trimmed to the cursor
+
+    Files are atomically published (tmp + rename) and NAMED BY step0, so a
+    partial-chunk flush (the tail of a run, or a pre-checkpoint flush) is
+    simply overwritten when the same chunk is completed later — restore
+    mid-chunk re-flushes dedupe by construction, no rows duplicated or
+    dropped (tests/test_probes.py::test_restore_mid_chunk).
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def flush(self, probe_set: ProbeSet, ps: ProbeState) -> Optional[str]:
+        if ps.cursor.ndim:
+            raise NotImplementedError(
+                "ProbeWriter flushes unbatched probe states; ensemble "
+                "runs flush per replica (index the leading axis first)"
+            )
+        rows = min(int(ps.cursor), probe_set.chunk_size)
+        if rows == 0:
+            return None
+        step0 = int(ps.step0)
+        arrays = {"__step0": np.int64(step0), "__rows": np.int64(rows)}
+        for name, buf in ps.buffers.items():
+            arrays[name] = np.asarray(buf[:rows])
+        final = os.path.join(self.directory, f"chunk_{step0:09d}.npz")
+        tmp = final + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        return final
+
+
+def read_trajectory(directory: str, name: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenate one probe's rows across all chunk files.
+
+    Returns (steps, values): (T,) int64 global step numbers (contiguous for
+    an uninterrupted run) and the (T, *row_shape) recorded rows, ordered by
+    step.
+    """
+    files = sorted(
+        f for f in os.listdir(directory) if f.startswith("chunk_") and f.endswith(".npz")
+    )
+    if not files:
+        raise FileNotFoundError(f"no chunk files in {directory}")
+    steps, values = [], []
+    for fname in files:
+        with np.load(os.path.join(directory, fname)) as data:
+            step0, rows = int(data["__step0"]), int(data["__rows"])
+            steps.append(np.arange(step0, step0 + rows, dtype=np.int64))
+            values.append(np.asarray(data[name]))
+    return np.concatenate(steps), np.concatenate(values)
+
+
+def simulate_chunked(
+    engine,
+    state: SimState,
+    key: jax.Array,
+    num_steps: int,
+    probes: ProbeSet,
+    *,
+    params=None,
+    probe_state: Optional[ProbeState] = None,
+    out_dir: Optional[str] = None,
+    interventions: Optional[Dict[int, Callable]] = None,
+    manager=None,
+) -> Tuple[SimState, Any, ProbeState]:
+    """Drive a probed simulation in chunk-size segments, flushing to disk.
+
+    The host loop slices `num_steps` at chunk boundaries (and at
+    intervention steps), calls the engine's jitted `simulate` per segment,
+    flushes each completed chunk through a `ProbeWriter`, and resets the
+    cursor.  Because the engines fold RNG keys by the CARRIED global step,
+    the chunked run is bitwise identical to one uninterrupted `simulate` —
+    the segmentation is invisible to the physics (DESIGN.md §12).
+
+    engine:        PlasticityEngine or DistributedPlasticityEngine
+                   (unbatched state; ensemble runs drive chunks themselves).
+    probe_state:   resume from a prior/restored ProbeState (None = fresh,
+                   started at the state's current step).
+    out_dir:       chunk files land here (None = keep buffers in memory;
+                   only the last chunk_size rows survive).
+    interventions: {global_step: fn(state) -> state} host-level surgery
+                   (e.g. `apply_lesion`) applied when the simulation
+                   reaches that step; the segment schedule splits there, so
+                   the hook sees the exact step-s state.
+    manager:       optional checkpoint/manager.CheckpointManager; the pair
+                   (state, probe_state) is saved after every completed
+                   chunk (restore with a (state, probe_state) template).
+
+    Returns (final state, concatenated StepRecord, final probe_state).
+    At most three distinct segment lengths occur for a given schedule
+    (chunk_size, a remainder, an intervention split), so jit recompiles
+    stay bounded.
+    """
+    if state.step.ndim:
+        raise ValueError(
+            "simulate_chunked drives unbatched engines; for ensembles call "
+            "EnsembleEngine.simulate with probes= and flush per replica"
+        )
+    writer = ProbeWriter(out_dir) if out_dir is not None else None
+    if probe_state is None:
+        probe_state = probes.init(engine.n, start_step=int(state.step))
+    pending = dict(interventions or {})
+    recs_list = []
+    done = 0
+    while done < num_steps:
+        step_now = int(state.step)
+        hook = pending.pop(step_now, None)
+        if hook is not None:
+            state = hook(state)
+        room = probes.chunk_size - int(probe_state.cursor)
+        take = min(room, num_steps - done)
+        upcoming = [s for s in pending if step_now < s < step_now + take]
+        if upcoming:
+            take = min(upcoming) - step_now
+        state, recs, probe_state = engine.simulate(state, key, take, params, probes, probe_state)
+        recs_list.append(jax.tree.map(np.asarray, recs))
+        done += take
+        if int(probe_state.cursor) >= probes.chunk_size:
+            if writer is not None:
+                writer.flush(probes, probe_state)
+            probe_state = probes.advance(probe_state)
+            if manager is not None:
+                manager.save((state, probe_state), int(state.step))
+    hook = pending.pop(int(state.step), None)
+    if hook is not None:
+        state = hook(state)
+    if writer is not None:
+        writer.flush(probes, probe_state)  # partial tail chunk
+    recs = jax.tree.map(lambda *xs: np.concatenate(xs), *recs_list)
+    return state, recs, probe_state
+
+
+def apply_lesion(state: SimState, mask) -> SimState:
+    """Ablate the masked neurons: zero their dynamic state, kill their edges.
+
+    mask: (n,) bool, True = lesioned.  The neuron keeps existing (positions
+    are static engine structure) but loses all activity, calcium, synaptic
+    elements, and every synapse touching it — the paper's lesion scenario.
+    Survivors' element counts are untouched, so the next connectivity
+    updates see vacancies where the dead synapses were and rewire around
+    the gap; the lesioned neurons themselves regrow from zero activity
+    (calcium below target -> element growth), which is the healing
+    dynamic the MSP was built to show (examples/lesion.py).
+
+    Host-level surgery: call between `simulate_chunked` segments (see its
+    `interventions` hook), not inside jit.  For distributed engines the
+    mask indexes the MORTON-SORTED neuron order (`engine.positions_np`).
+    """
+    mask = jnp.asarray(mask, bool)
+    zero = lambda x: jnp.where(mask, jnp.zeros_like(x), x)
+    neurons = jax.tree.map(zero, state.neurons)
+    hit = mask[state.edges.src] | mask[state.edges.dst]
+    edges = state.edges._replace(valid=state.edges.valid & ~hit)
+    return state._replace(neurons=neurons, edges=edges)

@@ -134,11 +134,16 @@ class SweepResult(NamedTuple):
     calcium_end: np.ndarray           # (K,) mean calcium over the tail window
     synapses_end: np.ndarray          # (K,) synapse count at the last step
     spike_rate: np.ndarray            # (K,) mean spike rate over the tail
+    # Final (K,)-leading core/probes.ProbeState when run_sweep(probes=...)
+    # rode a ProbeSet along; None otherwise.  Appended last with a default
+    # so positional unpacking of older six-field results keeps working.
+    probe_states: Optional[object] = None
 
 
 def run_sweep(engine: PlasticityEngine, configs: Sequence[Dict[str, float]],
               num_steps: int, seed: int = 0, replicates: int = 1,
-              mesh: Optional[Mesh] = None, tail: int = 500) -> SweepResult:
+              mesh: Optional[Mesh] = None, tail: int = 500,
+              probes=None) -> SweepResult:
     """Run every config (x replicates seeds) batched; reduce trajectories.
 
     The replica count K = len(configs) * replicates; per-replica keys are
@@ -147,6 +152,13 @@ def run_sweep(engine: PlasticityEngine, configs: Sequence[Dict[str, float]],
     replica axis is sharded (EnsembleEngine); a 2-D (ensemble x data) mesh
     from launch.mesh.make_sweep_mesh -> replicas x data-sharded neurons
     (core/distributed.DistributedEnsembleEngine, for large-n grids).
+
+    probes: optional core/probes.ProbeSet recorded per replica (pure
+    observers — sweep results are bitwise unchanged; DESIGN.md §12).  The
+    final (K,)-leading probe buffers come back as SweepResult.probe_states;
+    with num_steps <= the chunk size they hold the whole trajectory, and
+    larger runs should drive core/probes.simulate_chunked per replica
+    instead.
     """
     swept_sigmas = [c.get("sigma", engine.fmm_cfg.sigma) for c in configs]
     if engine.fmm_cfg.sigma > min(swept_sigmas):
@@ -162,7 +174,14 @@ def run_sweep(engine: PlasticityEngine, configs: Sequence[Dict[str, float]],
     # Pack AFTER routing: a 2-D wrap swaps in a DistributedPlasticityEngine
     # (same configs, Morton-sorted neurons) — defaults must come from it.
     params = pack_params(ens.engine, expanded)
-    states, recs = ens.simulate(ens.init_states(k), keys, num_steps, params)
+    pstates = None
+    if probes is None:
+        states, recs = ens.simulate(ens.init_states(k), keys, num_steps,
+                                    params)
+    else:
+        states, recs, pstates = ens.simulate(
+            ens.init_states(k), keys, num_steps, params, probes,
+            probes.init(ens.engine.n, batch=k))
     jax.block_until_ready(recs.calcium_mean)
 
     t = min(tail, num_steps)
@@ -172,7 +191,8 @@ def run_sweep(engine: PlasticityEngine, configs: Sequence[Dict[str, float]],
     return SweepResult(configs=expanded, states=states, records=recs,
                        calcium_end=ca[-t:].mean(axis=0),
                        synapses_end=syn[-1],
-                       spike_rate=rate[-t:].mean(axis=0))
+                       spike_rate=rate[-t:].mean(axis=0),
+                       probe_states=pstates)
 
 
 def summarize(result: SweepResult) -> List[Dict[str, float]]:

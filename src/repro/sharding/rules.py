@@ -241,6 +241,34 @@ def find_request_spec(data_axis: str = "data") -> P:
     return P(data_axis)
 
 
+# -- probe recording buffers (core/probes.py) ----------------------------------
+
+def probe_state_spec(probe_set, data_axis: str = "data",
+                     ensemble_axis: str | None = None) -> PyTree:
+    """ProbeState-shaped PartitionSpec tree for a probe-attached simulate.
+
+    Owner-span-local recording (DESIGN.md §12): a `row_sharded` probe's
+    (chunk, n) buffer shards its NEURON dim over the data axis, so each
+    device records only its owned contiguous rows — recording adds zero
+    collectives.  Aggregate probes (needs_merge, e.g. synapse turnover)
+    keep replicated buffers: their per-device partials are psummed by the
+    engine before the row is written, so every device holds the identical
+    merged rows.  The cursor/step0 scalars are replicated too (devices
+    record in lockstep).
+
+    ensemble_axis: set on the 2-D sweep mesh — every leaf gains the leading
+    replica axis (buffers are (K, chunk, ...), cursors (K,)), composing
+    exactly like ensemble_sharded_spec does for SimState.
+    """
+    from repro.core.probes import ProbeState   # deferred: core imports rules
+    lead = () if ensemble_axis is None else (ensemble_axis,)
+    buf_specs = {}
+    for p in probe_set.probes:
+        buf_specs[p.name] = (P(*lead, None, data_axis) if p.row_sharded
+                             else P(*lead))
+    return ProbeState(cursor=P(*lead), step0=P(*lead), buffers=buf_specs)
+
+
 # -- 2-D sweep mesh (ensemble x data) ------------------------------------------
 
 def sweep2d_spec(ensemble_axis: str = "ensemble", data_axis: str = "data",

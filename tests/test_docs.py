@@ -2,9 +2,13 @@
 
 The same check runs as a blocking CI step (tools/check_design_refs.py);
 having it in the tier-1 suite catches dangling references locally before a
-push.
+push.  Also covers the user guides under docs/: every python fence must
+parse and every backticked repo path must exist, so guide snippets cannot
+silently rot.
 """
+import ast
 import os
+import re
 import subprocess
 import sys
 
@@ -28,3 +32,42 @@ def test_design_md_has_cited_sections():
     # octree.py cites "§2, assumption 3" — keep the numbered log intact
     assert "3. **Expansions are formed about static geometric box centers" \
         in text
+    # PR 7: the probe subsystem's contract section
+    assert "## §12" in text, "DESIGN.md lost its §12 (probe subsystem)"
+
+
+def test_probes_guide_exists_and_is_linked():
+    path = os.path.join(ROOT, "docs", "probes.md")
+    assert os.path.isfile(path), "docs/probes.md missing"
+    with open(os.path.join(ROOT, "README.md")) as f:
+        assert "docs/probes.md" in f.read(), \
+            "README.md no longer links the probes guide"
+
+
+def test_probes_guide_python_snippets_parse():
+    """Every ```python fence in docs/probes.md must be valid syntax."""
+    with open(os.path.join(ROOT, "docs", "probes.md")) as f:
+        text = f.read()
+    fences = re.findall(r"```python\n(.*?)```", text, re.S)
+    assert len(fences) >= 3, "the guide lost its worked examples"
+    for i, snippet in enumerate(fences):
+        try:
+            ast.parse(snippet)
+        except SyntaxError as e:
+            raise AssertionError(
+                f"docs/probes.md python fence #{i} does not parse: {e}\n"
+                f"{snippet}") from None
+
+
+def test_probes_guide_referenced_paths_exist():
+    """Backticked repo-relative paths in the guide must exist on disk."""
+    with open(os.path.join(ROOT, "docs", "probes.md")) as f:
+        text = f.read()
+    paths = re.findall(
+        r"`((?:src|tests|examples|benchmarks|docs|tools)/[\w./]+?"
+        r"\.(?:py|md))(?:::\w+)?`", text)
+    assert "examples/lesion.py" in paths        # the walkthroughs' anchors
+    assert "examples/topographic_map.py" in paths
+    for p in sorted(set(paths)):
+        assert os.path.isfile(os.path.join(ROOT, p)), \
+            f"docs/probes.md references {p}, which does not exist"

@@ -1,0 +1,377 @@
+"""Probe subsystem tests (core/probes.py, DESIGN.md §12).
+
+The contract under test: probes are PURE OBSERVERS.  A probe-attached run
+is bitwise identical — StepRecord streams, final state, recorded rows —
+to a probe-free run, for the single-device, ensemble, and distributed
+engines; chunking/flushing/restoring never perturbs (or loses) a row.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import probes
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.checkpoint.manager import restore_pytree, save_pytree
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N = 96
+
+
+def _engine(n=N, seed=0, speedup=400.0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+    return PlasticityEngine(
+        pos,
+        MSPConfig.calibrated(speedup=speedup),
+        FMMConfig(c1=8, c2=8),
+        EngineConfig(method="fmm"),
+    )
+
+
+def _pset(n=N, chunk=1000, regions=2):
+    region = (np.arange(n) % regions).astype(np.int32)
+    return probes.ProbeSet(
+        (probes.SpikeRasterProbe(), probes.CalciumProbe(), probes.TurnoverProbe(region, regions)),
+        chunk_size=chunk,
+    )
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for i, (x, y) in enumerate(zip(jax.tree.leaves(a), jax.tree.leaves(b))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=f"{msg} leaf {i}")
+
+
+def test_probed_run_is_bitwise_pure():
+    """Probes change nothing: records + final state match a probe-free run,
+    and the recorded rows are the true per-step observables."""
+    eng = _engine()
+    key = jax.random.key(0)
+    ref_state, ref_recs = eng.simulate(eng.init_state(), key, 600)
+
+    pset = _pset()
+    state, recs, ps = eng.simulate(eng.init_state(), key, 600, None, pset, pset.init(eng.n))
+    _assert_trees_equal(recs, ref_recs, "records")
+    _assert_trees_equal(state, ref_state, "final state")
+
+    assert int(ps.cursor) == 600 and int(ps.step0) == 1
+    # raster row r holds step r+1's spikes: row sums == spike_rate * n
+    rate = np.asarray(recs.spike_rate)
+    raster = np.asarray(ps.buffers["spikes"][:600])
+    np.testing.assert_array_equal(raster.sum(axis=1), np.round(rate * eng.n).astype(int))
+    # calcium's last row is the final state's calcium, bitwise
+    np.testing.assert_array_equal(
+        np.asarray(ps.buffers["calcium"][599]), np.asarray(state.neurons.calcium)
+    )
+    # turnover net flux == synapse-count deltas between update steps
+    syn = np.asarray(recs.num_synapses)
+    turn = np.asarray(ps.buffers["turnover"][:600])
+    net = turn[:, 0].sum(axis=1) - turn[:, 1].sum(axis=1)
+    np.testing.assert_array_equal(np.diff(syn), net[1:])
+    assert syn[-1] > 50  # the run actually grew a network
+
+
+def test_chunked_equals_full_and_trajectory_contiguous(tmp_path):
+    """simulate_chunked == one uninterrupted simulate, bitwise; chunk files
+    concatenate to a contiguous step trajectory."""
+    eng = _engine()
+    key = jax.random.key(1)
+    pset = _pset(chunk=100)
+    ref_state, ref_recs = eng.simulate(eng.init_state(), key, 260)
+
+    out = str(tmp_path / "chunks")
+    state, recs, ps = probes.simulate_chunked(eng, eng.init_state(), key, 260, pset, out_dir=out)
+    _assert_trees_equal(recs, ref_recs, "records")
+    _assert_trees_equal(state, ref_state, "final state")
+
+    files = sorted(os.listdir(out))
+    assert files == ["chunk_000000001.npz", "chunk_000000101.npz", "chunk_000000201.npz"]
+    steps, raster = probes.read_trajectory(out, "spikes")
+    np.testing.assert_array_equal(steps, np.arange(1, 261))
+    rate = np.asarray(ref_recs.spike_rate)
+    np.testing.assert_array_equal(raster.sum(axis=1), np.round(rate * eng.n).astype(int))
+    # tail chunk is partial: 60 rows
+    with np.load(os.path.join(out, files[-1])) as data:
+        assert int(data["__rows"]) == 60 and int(data["__step0"]) == 201
+
+
+def test_restore_mid_chunk_no_duplicate_or_dropped_rows(tmp_path):
+    """Checkpoint at step 130 (cursor mid-chunk), restore, resume: the chunk
+    directory ends up file-for-file identical to an uninterrupted run."""
+    eng = _engine()
+    key = jax.random.key(2)
+    pset = _pset(chunk=100)
+
+    ref_dir = str(tmp_path / "ref")
+    probes.simulate_chunked(eng, eng.init_state(), key, 260, pset, out_dir=ref_dir)
+
+    out = str(tmp_path / "resumed")
+    ckpt = str(tmp_path / "ckpt")
+    state, _, ps = probes.simulate_chunked(eng, eng.init_state(), key, 130, pset, out_dir=out)
+    assert int(ps.cursor) == 30 and int(ps.step0) == 101
+    save_pytree((state, ps), ckpt, int(state.step))
+
+    template = (eng.init_state(), pset.init(eng.n))
+    (state2, ps2), step = restore_pytree(template, ckpt)
+    assert step == 130 and int(state2.step) == 130
+    _assert_trees_equal(ps2, ps, "restored probe state")
+    probes.simulate_chunked(eng, state2, key, 130, pset, out_dir=out, probe_state=ps2)
+
+    assert sorted(os.listdir(out)) == sorted(os.listdir(ref_dir))
+    for fname in sorted(os.listdir(ref_dir)):
+        with np.load(os.path.join(ref_dir, fname)) as a:
+            with np.load(os.path.join(out, fname)) as b:
+                assert set(a.files) == set(b.files), fname
+                for k in a.files:
+                    np.testing.assert_array_equal(a[k], b[k], err_msg=f"{fname}:{k}")
+
+
+def test_intervention_hook_and_checkpoint_manager(tmp_path):
+    """The interventions= hook fires at the exact step; manager= saves a
+    restorable (state, probe_state) pair after completed chunks."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    eng = _engine()
+    key = jax.random.key(3)
+    pset = _pset(chunk=100)
+    seen = []
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), async_save=False)
+
+    def hook(st):
+        seen.append(int(st.step))
+        return st  # identity: the run must stay bitwise equal
+
+    ref_state, ref_recs = eng.simulate(eng.init_state(), key, 250)
+    state, recs, _ = probes.simulate_chunked(
+        eng,
+        eng.init_state(),
+        key,
+        250,
+        pset,
+        out_dir=str(tmp_path / "chunks"),
+        interventions={130: hook},
+        manager=mgr,
+    )
+    assert seen == [130]
+    _assert_trees_equal(recs, ref_recs, "records")
+    _assert_trees_equal(state, ref_state, "final state")
+    template = (eng.init_state(), pset.init(eng.n))
+    (st2, ps2), step = mgr.restore(template)
+    assert step == 200 and int(st2.step) == 200  # after chunk 2 completed
+    assert int(ps2.cursor) == 0 and int(ps2.step0) == 201
+    mgr.close()
+
+
+def test_forced_deletion_visible_in_turnover():
+    """Zeroing every synaptic element forces the next connectivity update to
+    delete ALL synapses; the turnover probe must show exactly that."""
+    eng = _engine()
+    key = jax.random.key(4)
+    state, recs = eng.simulate(eng.init_state(), key, 600)
+    alive = int(np.asarray(recs.num_synapses)[-1])
+    assert alive > 50
+
+    # Zero the elements AND pin calcium far above eps: the growth curve
+    # retracts there, so elements stay clamped at 0 until the next update,
+    # which must therefore delete every synapse.
+    neurons = state.neurons._replace(
+        ax_elems=jnp.zeros_like(state.neurons.ax_elems),
+        den_elems=jnp.zeros_like(state.neurons.den_elems),
+        calcium=jnp.full_like(state.neurons.calcium, 2.0),
+    )
+    state = state._replace(neurons=neurons)
+
+    pset = _pset()
+    interval = eng.msp_cfg.update_interval
+    state, recs2, ps = eng.simulate(
+        state, key, interval + 5, None, pset, pset.init(eng.n, start_step=600)
+    )
+    turn = np.asarray(ps.buffers["turnover"][: interval + 5])
+    births, deaths = turn[:, 0].sum(axis=1), turn[:, 1].sum(axis=1)
+    assert deaths.sum() == alive, (deaths.sum(), alive)
+    assert (deaths > 0).sum() == 1  # one massacre step, nothing else
+    upd = int(np.argmax(deaths > 0))
+    assert births[: upd + 1].sum() == 0  # no births up to the massacre
+    assert int(np.asarray(recs2.num_synapses)[upd]) == 0
+
+
+def test_ensemble_probes_match_sequential_runs():
+    """K=2 batched probed run == two independent single-engine probed runs,
+    bitwise, and the batched results match the probe-free batch."""
+    from repro.core.ensemble import EnsembleEngine
+
+    eng = _engine()
+    ens = EnsembleEngine(eng)
+    keys = jax.random.split(jax.random.key(5), 2)
+    pset = _pset()
+
+    ref_states, ref_recs = ens.simulate(ens.init_states(2), keys, 300)
+    states, recs, pss = ens.simulate(
+        ens.init_states(2), keys, 300, None, pset, pset.init(eng.n, batch=2)
+    )
+    _assert_trees_equal(recs, ref_recs, "records")
+    _assert_trees_equal(states, ref_states, "final states")
+
+    for r in range(2):
+        _, _, ps1 = eng.simulate(eng.init_state(), keys[r], 300, None, pset, pset.init(eng.n))
+        _assert_trees_equal(jax.tree.map(lambda x: x[r], pss), ps1, f"replica {r} probe state")
+
+
+def test_distributed_one_device_probes_match_single():
+    """DistributedPlasticityEngine on a 1-device mesh: probed records and
+    every probe buffer bitwise match the single-device probed run."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistributedPlasticityEngine
+
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 1000.0, (N, 3)).astype(np.float32)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    deng = DistributedPlasticityEngine(
+        pos,
+        mesh,
+        "data",
+        MSPConfig.calibrated(speedup=400.0),
+        FMMConfig(c1=8, c2=8),
+        EngineConfig(method="fmm"),
+    )
+    # single-device reference on the SAME (morton-sorted) positions
+    seng = PlasticityEngine(
+        deng.positions_np,
+        MSPConfig.calibrated(speedup=400.0),
+        FMMConfig(c1=8, c2=8),
+        EngineConfig(method="fmm"),
+    )
+    key = jax.random.key(6)
+    pset = _pset()
+    _, ref_recs, ref_ps = seng.simulate(seng.init_state(), key, 400, None, pset, pset.init(seng.n))
+    _, recs, ps = deng.simulate(deng.init_state(), key, 400, None, pset, pset.init(deng.n))
+    _assert_trees_equal(recs, ref_recs, "records")
+    _assert_trees_equal(ps, ref_ps, "probe state")
+    turn = np.asarray(ps.buffers["turnover"][:400])
+    assert turn[:, 0].sum() > 0  # births actually recorded
+
+
+def test_2d_mesh_ensemble_probes_match_single():
+    """DistributedEnsembleEngine on a 1x1 mesh: per-replica probe buffers
+    match independent single-engine probed runs."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistributedEnsembleEngine, DistributedPlasticityEngine
+
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 1000.0, (N, 3)).astype(np.float32)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("ensemble", "data"))
+    deng = DistributedPlasticityEngine(
+        pos,
+        mesh,
+        "data",
+        MSPConfig.calibrated(speedup=400.0),
+        FMMConfig(c1=8, c2=8),
+        EngineConfig(method="fmm"),
+    )
+    dens = DistributedEnsembleEngine(deng)
+    seng = PlasticityEngine(
+        deng.positions_np,
+        MSPConfig.calibrated(speedup=400.0),
+        FMMConfig(c1=8, c2=8),
+        EngineConfig(method="fmm"),
+    )
+    keys = jax.random.split(jax.random.key(7), 2)
+    pset = _pset()
+    _, recs, pss = dens.simulate(
+        dens.init_states(2), keys, 300, None, pset, pset.init(deng.n, batch=2)
+    )
+    for r in range(2):
+        _, ref_recs, ref_ps = seng.simulate(
+            seng.init_state(), keys[r], 300, None, pset, pset.init(seng.n)
+        )
+        _assert_trees_equal(jax.tree.map(lambda x: x[:, r], recs), ref_recs, f"replica {r} recs")
+        _assert_trees_equal(jax.tree.map(lambda x: x[r], pss), ref_ps, f"replica {r} probe state")
+
+
+def test_probe_set_validation():
+    with pytest.raises(ValueError, match="duplicate"):
+        probes.ProbeSet((probes.CalciumProbe(), probes.CalciumProbe()))
+    with pytest.raises(ValueError, match="chunk_size"):
+        probes.ProbeSet((probes.CalciumProbe(),), chunk_size=0)
+    eng = _engine(n=32)
+    pset = _pset(n=32)
+    batched = pset.init(32, batch=2)
+    with pytest.raises(NotImplementedError, match="per replica"):
+        probes.ProbeWriter("/tmp/unused_probe_dir").flush(pset, batched)
+    with pytest.raises(ValueError, match="unbatched"):
+        bstate = jax.tree.map(lambda x: jnp.stack([x, x]), eng.init_state())
+        probes.simulate_chunked(eng, bstate, jax.random.key(0), 10, pset)
+
+
+_MULTIDEV_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import probes
+from repro.core.distributed import DistributedPlasticityEngine
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+
+assert len(jax.devices()) == 8
+rng = np.random.default_rng(0)
+pos = rng.uniform(0, 1000.0, (128, 3)).astype(np.float32)
+msp = MSPConfig.calibrated(speedup=400.0)
+fmm = FMMConfig(c1=8, c2=8)
+region = (np.arange(128) % 3).astype(np.int32)
+
+ref_ps = ref_recs = None
+for p in (1, 2, 4, 8):
+    mesh = Mesh(np.array(jax.devices()[:p]), ("data",))
+    deng = DistributedPlasticityEngine(pos, mesh, "data", msp, fmm,
+                                       EngineConfig(method="fmm"))
+    if ref_ps is None:
+        seng = PlasticityEngine(deng.positions_np, msp, fmm,
+                                EngineConfig(method="fmm"))
+        pset = probes.ProbeSet(
+            (probes.SpikeRasterProbe(), probes.CalciumProbe(),
+             probes.TurnoverProbe(region, 3)),
+            chunk_size=1000)
+        _, ref_recs, ref_ps = seng.simulate(
+            seng.init_state(), jax.random.key(0), 400, None, pset,
+            pset.init(seng.n))
+    _, recs, ps = deng.simulate(deng.init_state(), jax.random.key(0), 400,
+                                None, pset, pset.init(deng.n))
+    for name in ("num_synapses", "calcium_mean", "calcium_std",
+                 "spike_rate"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(recs, name)),
+            np.asarray(getattr(ref_recs, name)), err_msg=f"p={p} {name}")
+    for a, b in zip(jax.tree.leaves(ps), jax.tree.leaves(ref_ps)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"p={p} probe leaf")
+    print("P_OK", p, int(np.asarray(recs.num_synapses)[-1]))
+print("ALL_OK")
+'''
+
+
+@pytest.mark.slow
+def test_multidevice_probe_parity_subprocess():
+    """p in {1, 2, 4, 8}: probed distributed runs bitwise match the probed
+    single-device run — records AND every probe buffer."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]
+    assert "ALL_OK" in res.stdout
+    for p in (1, 2, 4, 8):
+        assert f"P_OK {p}" in res.stdout

@@ -1,0 +1,89 @@
+"""Scenario regressions: the examples/ probe scenarios at smoke sizes.
+
+These import the example modules directly (each example is also a library:
+`run(...)` returns the scenario's statistics) so the CI-checked assertions
+and the user-facing walkthroughs (docs/probes.md) cannot drift apart.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "examples"))
+
+import lesion  # noqa: E402  (examples/lesion.py)
+import topographic_map  # noqa: E402  (examples/topographic_map.py)
+
+
+@pytest.fixture(scope="module")
+def lesion_result(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("lesion_chunks"))
+    return lesion.run(n=160, steps_pre=1000, steps_post=1500, chunk=250, speedup=400.0, out_dir=out)
+
+
+def test_lesion_heals_across_the_gap(lesion_result):
+    """The paper's healing story: ablating the middle slab kills every
+    synapse touching it, and rewiring reconnects both into and across it."""
+    res = lesion_result
+    pre, at, post = res["pre"], res["at_lesion"], res["post"]
+    assert pre["mid_touching"] > 0  # the slab was wired in
+    assert at["mid_touching"] == 0  # lesion killed all of it
+    assert at["cross_gap"] == pre["cross_gap"]  # left<->right untouched
+    assert at["total"] == pre["total"] - pre["mid_touching"]
+    assert post["mid_touching"] > 0  # the slab rewired
+    assert post["cross_gap"] > at["cross_gap"]  # and the gap bridged wider
+    assert post["total"] > at["total"]
+    assert np.isfinite(res["calcium_end"]) and res["calcium_end"] > 0.1
+
+
+def test_lesion_turnover_probe_shows_the_birth_wave(lesion_result):
+    """The turnover probe's on-disk trajectory shows post-lesion births in
+    the lesioned region — observability of the healing, not just its end
+    state."""
+    res = lesion_result
+    assert res["births_mid_post"] > 0
+    from repro.core import probes
+
+    steps, turnover = probes.read_trajectory(res["out_dir"], "turnover")
+    # contiguous steps across the lesion boundary: the probe stream is one
+    # trajectory even though the run was two simulate_chunked calls
+    np.testing.assert_array_equal(steps, np.arange(1, len(steps) + 1))
+    pre_rows = steps <= res["steps_pre"]
+    # the lesion is invisible to the slot table (host surgery between
+    # steps), but the REWIRING shows: more middle-region births after
+    births_mid = turnover[:, 0, lesion.LESIONED]
+    assert births_mid[~pre_rows].sum() > 0
+
+
+def test_lesion_calcium_collapse_and_recovery(lesion_result):
+    """Calcium probe: the lesioned slab's calcium collapses to ~0 at the
+    lesion (its state was zeroed) and climbs back toward the homeostatic
+    target as the slab reintegrates.  (Spikes never fully stop — background
+    drive is network-independent — so calcium, not the raster, carries the
+    lesion signature.)"""
+    res = lesion_result
+    from repro.core import probes
+
+    steps, calcium = probes.read_trajectory(res["out_dir"], "calcium")
+    mid = res["region"] == lesion.LESIONED
+    before = float(calcium[steps == res["steps_pre"], mid].mean())
+    right_after = float(calcium[steps == res["steps_pre"] + 1, mid].mean())
+    end = float(calcium[-1, mid].mean())
+    assert right_after < 0.5 * before  # collapsed at the lesion
+    assert end > 2.0 * right_after  # recovering toward target
+
+
+def test_topographic_map_kernel_width_ordering():
+    """Narrow kernels wire topographically (short edges, x-preserving);
+    wide kernels don't — the orderings the paper's kernel implies."""
+    res = topographic_map.run(n=160, steps=1200, speedup=400.0, chunk=300)
+    narrow = res[topographic_map.SIGMA_NARROW]
+    wide = res[topographic_map.SIGMA_WIDE]
+    assert narrow["edges"] > 100 and wide["edges"] > 100
+    assert narrow["mean_dist"] < wide["mean_dist"]
+    assert narrow["x_corr"] > wide["x_corr"]
+    assert narrow["x_corr"] > 0.5  # strongly place-preserving
+    assert wide["x_corr"] < 0.7  # clearly less ordered

@@ -1,8 +1,9 @@
 #!/usr/bin/env python3
 """Docs-consistency check: every `DESIGN.md §N` reference must resolve.
 
-Scans src/, tests/, examples/ (plus the top-level *.md files, DESIGN.md's
-own cross-references included) and fails if any numeric `§N` token names a
+Scans src/, tests/, examples/, benchmarks/, docs/ (plus the top-level *.md
+files, DESIGN.md's own cross-references included) and fails if any numeric
+`§N` token names a
 section DESIGN.md does not have.  Numeric § sections are a DESIGN.md-only
 convention in this repo (EXPERIMENTS.md uses named anchors like §Perf /
 §Roofline), so EVERY `§N` is treated as a citation — this catches chained
@@ -22,7 +23,7 @@ from pathlib import Path
 
 REF = re.compile(r"§(\d+)")
 SECTION = re.compile(r"^##\s*§(\d+)\b", re.M)
-SCAN_DIRS = ("src", "tests", "examples", "benchmarks")
+SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "docs")
 SCAN_SUFFIXES = {".py", ".md", ".yml", ".yaml", ".toml"}
 
 
