@@ -551,6 +551,169 @@ def fig_find_scaling(device_counts=(1, 2, 4, 8), n=2048, steps=800,
     return out
 
 
+_EXCHANGE_SCRIPT = r'''
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={max(int(sys.argv[1]) * max(int(sys.argv[5]), 1), int(sys.argv[1]))}"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.distributed import (DistributedEnsembleEngine,
+                                    DistributedPlasticityEngine)
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.ensemble import EnsembleEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.launch import sweep
+from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
+
+p, n, steps, depth, sweep_k, reps = (int(a) for a in sys.argv[1:7])
+rng = np.random.default_rng(0)
+pos = rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+msp_cfg = MSPConfig.calibrated(speedup=100.0)
+fmm_cfg = FMMConfig(c1=4, c2=4, sigma=400.0)
+ecfg = EngineConfig(method="fmm", depth=depth)
+out = {"p": p, "n": n, "depth": depth}
+mesh = Mesh(np.array(jax.devices()[:p]), ("data",))
+ref = None
+for mode in ("routed", "gathered"):
+    eng = DistributedPlasticityEngine(pos, mesh, "data", msp_cfg, fmm_cfg,
+                                      ecfg, pyramid_exchange=mode)
+    if ref is None:   # single-device reference on the same sorted positions
+        seng = PlasticityEngine(eng.positions_np, msp_cfg, fmm_cfg, ecfg)
+        ref = seng.simulate(seng.init_state(), jax.random.key(0), steps)
+    st, recs = eng.simulate(eng.init_state(), jax.random.key(0), steps)
+    bitwise = (
+        all(np.array_equal(np.asarray(getattr(recs, f)),
+                           np.asarray(getattr(ref[1], f)))
+            for f in recs._fields)
+        and all(np.array_equal(np.asarray(getattr(st.edges, f)),
+                               np.asarray(getattr(ref[0].edges, f)))
+                for f in ("src", "dst", "valid")))
+    # A parity violation is a bug, never a tolerance issue (DESIGN.md §13):
+    # fail the leg so run.py exits nonzero instead of shipping a false
+    # canary in the artifact.
+    assert bitwise, f"{mode} exchange != single-device sim at p={p}"
+    assert int(np.asarray(recs.num_synapses)[-1]) > 0, "vacuous canary"
+
+    # Wall time of ONE connectivity-update step at representative vacancies
+    # (informational on CI hosts: the forced devices share two cores).
+    state = eng.init_state()
+    state = state._replace(neurons=state.neurons._replace(
+        ax_elems=jnp.full((n,), 2.0), den_elems=jnp.full((n,), 2.0)))
+    state_spec, rec_spec = eng._specs()
+    step = jax.jit(shard_map(
+        lambda s, k: eng.local_step(s, k, do_update=jnp.bool_(True)),
+        mesh=mesh, in_specs=(state_spec, P()),
+        out_specs=(state_spec, rec_spec), **SHARD_MAP_NO_CHECK))
+    jax.block_until_ready(step(state, jax.random.key(0))[0].edges.valid)
+    ts = []
+    for r in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(state, jax.random.key(r))[0].edges.valid)
+        ts.append(time.perf_counter() - t0)
+    out[mode] = {"bitwise": bool(bitwise), "update_step_s": min(ts),
+                 "pyramid_payload_elements":
+                     eng.pyramid_exchange_payload(mode)
+                     ["pyramid_payload_elements"]}
+
+if sweep_k > 0:
+    # Swept KernelParams on a 2-D ensemble x data mesh: the routed fetch
+    # must stay bitwise under the replica vmap (psum_scatter batching).
+    mesh2 = Mesh(np.array(jax.devices()[:sweep_k * p]).reshape(sweep_k, p),
+                 ("ensemble", "data"))
+    d = DistributedPlasticityEngine(pos, mesh2, "data", msp_cfg, fmm_cfg,
+                                    ecfg, pyramid_exchange="routed")
+    dens = DistributedEnsembleEngine(d)
+    seng = PlasticityEngine(d.positions_np, msp_cfg, fmm_cfg, ecfg)
+    ens = EnsembleEngine(seng)
+    configs = [{"sigma": 400.0 + 300.0 * i} for i in range(sweep_k)]
+    params = sweep.pack_params(seng, configs)
+    keys = jax.random.split(jax.random.key(3), sweep_k)
+    _, rref = ens.simulate(ens.init_states(sweep_k), keys, steps, params)
+    _, rgot = dens.simulate(dens.init_states(sweep_k), keys, steps, params)
+    swept_bitwise = all(
+        np.array_equal(np.asarray(getattr(rgot, f)),
+                       np.asarray(getattr(rref, f)))
+        for f in rref._fields)
+    assert swept_bitwise, f"routed swept ensemble != single-device at p={p}"
+    out["swept_bitwise"] = bool(swept_bitwise)
+print(json.dumps(out))
+'''
+
+
+def fig_exchange(device_counts=(1, 2, 4, 8), n=128, steps=1500, depth=3,
+                 sweep_k=2, reps=3, weak_n_per=512,
+                 weak_counts=(1, 2, 4, 8, 16)) -> Dict:
+    """Pyramid exchange payload: request-routed vs gathered (DESIGN.md §13).
+
+    Headline: in weak scaling (n = weak_n_per * p, auto tree depth) the
+    per-device exchanged payload of the routed mode stays FLAT
+    (`routed_flatness_x`, target <= 1.5) while the gathered mode grows with
+    the pyramid — O(n).  The payload curves come from the engines' work
+    model (`pyramid_exchange_payload`, host-side statics: no devices
+    needed, so the curve extends to p=16 beyond any forced-device run; the
+    in-graph psum_scatter transport is a portable stand-in whose wire
+    traffic the model deliberately does not count — DESIGN.md §13
+    "Emulation vs model").  Subprocess legs at forced device counts run the
+    bitwise canaries that validate the emulation: routed and gathered
+    `simulate` both reproduce the single-device run exactly — records AND
+    committed edge tables — plus a swept-KernelParams ensemble on a 2-D
+    mesh, and time one connectivity-update step per mode (informational on
+    CI hosts)."""
+    from repro.core.engine import EngineConfig
+    from repro.core.msp import MSPConfig
+    from repro.core.traversal import FMMConfig
+    from repro.core.distributed import DistributedPlasticityEngine
+
+    class _ShapeOnlyMesh:
+        def __init__(self, p):
+            self.shape = {"data": p}
+
+    rng = np.random.default_rng(0)
+    out: Dict = {"weak_scaling": {}}
+    for p in weak_counts:
+        eng = DistributedPlasticityEngine(
+            rng.uniform(0, 1000.0, (weak_n_per * p, 3)).astype(np.float32),
+            _ShapeOnlyMesh(p), "data", MSPConfig.calibrated(speedup=100.0),
+            FMMConfig(c1=8, c2=8), EngineConfig(method="fmm", depth=None),
+            pyramid_exchange="routed")
+        out["weak_scaling"][str(p)] = {
+            "n": eng.n, "depth": eng.structure.depth,
+            "routed_payload_elements":
+                eng.pyramid_exchange_payload("routed")
+                ["pyramid_payload_elements"],
+            "gathered_payload_elements":
+                eng.pyramid_exchange_payload("gathered")
+                ["pyramid_payload_elements"]}
+    weak = out["weak_scaling"]
+    base = weak[str(weak_counts[0])]
+    out["routed_flatness_x"] = round(
+        max(w["routed_payload_elements"] for w in weak.values())
+        / base["routed_payload_elements"], 4)
+    out["gathered_growth_x"] = round(
+        weak[str(weak_counts[-1])]["gathered_payload_elements"]
+        / base["gathered_payload_elements"], 4)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    for p in device_counts:
+        res = subprocess.run(
+            [sys.executable, "-c", _EXCHANGE_SCRIPT, str(p), str(n),
+             str(steps), str(depth), str(sweep_k if p * sweep_k <= 8 else 0),
+             str(reps)],
+            env=env, capture_output=True, text=True, timeout=3600)
+        if res.returncode != 0:
+            out[str(p)] = {"error": res.stderr[-800:]}
+        else:
+            out[str(p)] = json.loads(res.stdout.strip().splitlines()[-1])
+    ok = [p for p in device_counts if "error" not in out[str(p)]]
+    if ok:
+        out["bitwise_all"] = all(
+            out[str(p)][m]["bitwise"] for p in ok
+            for m in ("routed", "gathered")) and all(
+            out[str(p)].get("swept_bitwise", True) for p in ok)
+    return out
+
+
 def complexity_sweep() -> Dict:
     """Sec. 4.1: dual-descent pair evaluations are linear in n; the direct
     method is quadratic.  Counted analytically from the dense BFS slabs."""

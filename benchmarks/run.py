@@ -39,6 +39,8 @@ QUICK = {
     "fig_pyramid_scaling": dict(device_counts=(1, 2), n=512, reps=1, depth=2),
     "fig_find_scaling": dict(device_counts=(1, 2), n=256, steps=400, reps=1,
                              depth=2),
+    "fig_exchange": dict(device_counts=(1, 2), n=128, steps=1500, depth=3,
+                         sweep_k=2, reps=1, weak_counts=(1, 2, 4, 8, 16)),
     "fig_kernels": dict(gauss_sizes=((256, 1024),), m2l_sizes=(2048,),
                         msp_sizes=(65536,), reps=2),
     "fig_probes": dict(n=160, steps=400, chunk_sizes=(50, 200), reps=1),
@@ -119,6 +121,13 @@ def main() -> None:
                 + "/".join(str(v) for v in
                            r.get("payload_ratio_sharded_over_replicated",
                                  {}).values())
+                + f";bitwise={r.get('bitwise_all')}"]))
+    run("fig_exchange", figures.fig_exchange,
+        lambda r: ";".join(
+            [f"error@p{k}={str(v['error'])[:40]}" for k, v in r.items()
+             if isinstance(v, dict) and "error" in v]
+            or [f"routed_flatness_x={r['routed_flatness_x']}"
+                + f";gathered_growth_x={r['gathered_growth_x']}"
                 + f";bitwise={r.get('bitwise_all')}"]))
     run("fig_kernels", figures.fig_kernels,
         lambda r: ";".join(

@@ -17,9 +17,13 @@ Mapping (see DESIGN.md §2 for the full assumption log):
                          slice memory are O(n/p) per level instead of O(n) —
                          except the single-box root level, which stays an
                          O(n) reduction on its owner (DESIGN.md §9)
-  lazy remote fetch   -> replicated shared pyramid (prefetch-everything);
-                         the hierarchical request-routed variant for 1000+
-                         nodes is described in DESIGN.md §4
+  lazy remote fetch   -> pyramid_exchange="gathered" (default) replicates
+                         the shared pyramid (prefetch-everything);
+                         pyramid_exchange="routed" keeps only a shallow
+                         shared-level slab dense and fetches deeper M2L
+                         interaction rows from their owners on demand,
+                         inside the descent — the paper's branch-node
+                         request queue (DESIGN.md §13)
   request exchange    -> default find_phase="sharded" (DESIGN.md §10): each
                          device descends only its owned occupied boxes
                          (per-level integer psum of disjoint dense-map
@@ -61,12 +65,14 @@ from typing import Optional, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax import custom_batching
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.sharding import rules
 from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
 
 from repro.core import barnes_hut, msp, octree, synapses, traversal
+from repro.core import multi_index as mi
 from repro.core.engine import (EngineConfig, KernelParams, PlasticityEngine,
                                SimState, StepRecord)
 from repro.core.ensemble import scan_replicas
@@ -86,7 +92,9 @@ class DistributedPlasticityEngine(PlasticityEngine):
                  fmm_cfg: FMMConfig = FMMConfig(),
                  engine_cfg: EngineConfig = EngineConfig(),
                  pyramid_partials: str = "owner_span",
-                 find_phase: str = "sharded"):
+                 find_phase: str = "sharded",
+                 pyramid_exchange: str = "gathered",
+                 routed_shared_levels: int = 2):
         positions = np.asarray(positions, np.float32)
         self.mesh = mesh
         self.axis = axis
@@ -109,8 +117,22 @@ class DistributedPlasticityEngine(PlasticityEngine):
             raise ValueError(
                 f"find_phase must be 'sharded' or 'replicated', "
                 f"got {find_phase!r}")
+        if pyramid_exchange not in ("gathered", "routed"):
+            raise ValueError(
+                f"pyramid_exchange must be 'gathered' or 'routed', "
+                f"got {pyramid_exchange!r}")
+        if pyramid_exchange == "routed" and (
+                engine_cfg.method != "fmm" or find_phase != "sharded"
+                or pyramid_partials != "owner_span"):
+            # The routed exchange fetches interaction rows on the fly inside
+            # the sharded FMM descent; the Barnes-Hut descent and the legacy
+            # replicated/masked paths read the full merged pyramid.
+            raise ValueError(
+                "pyramid_exchange='routed' requires method='fmm', "
+                "find_phase='sharded' and pyramid_partials='owner_span'")
         self.pyramid_partials = pyramid_partials
         self.find_phase = find_phase
+        self.pyramid_exchange = pyramid_exchange
         # Pre-sort by Morton code -> contiguous subtree ownership.
         tmp = octree.build_structure(positions, engine_cfg.domain,
                                      engine_cfg.depth)
@@ -128,6 +150,14 @@ class DistributedPlasticityEngine(PlasticityEngine):
         # comparison benchmarks — both are bitwise identical to
         # octree.build_pyramid).
         self._spans = octree.owner_spans(self.structure, self.num_shards)
+        # Static request/owner tables for the routed exchange (DESIGN.md
+        # §13): which boxes each rank scores per level, and who owns each
+        # occupied box.  Shared levels 0..routed_shared_levels keep the
+        # dense psum slab; deeper levels fetch interaction rows on demand.
+        self.routed_shared_levels = min(max(int(routed_shared_levels), 0),
+                                        self.structure.depth)
+        self._tables = (octree.routed_tables(self.structure, self._spans)
+                        if pyramid_exchange == "routed" else None)
         # Slot-range sharding of the edge table needs the shard count to
         # divide the capacity too.  It always does (edge_capacity is a
         # per-neuron multiple of n and num_shards | n), but assert it
@@ -202,6 +232,118 @@ class DistributedPlasticityEngine(PlasticityEngine):
             levels.append(octree.finalize_level(centers, merged, cfg.p))
         return levels
 
+    def _routed_pyramid(self, ax_vac_g: jnp.ndarray, den_vac_g: jnp.ndarray,
+                        fmm_cfg: Optional[FMMConfig] = None):
+        """Request-routed pyramid exchange (DESIGN.md §13).
+
+        Returns (levels, level_data_fn).  Levels 0..routed_shared_levels are
+        merged dense exactly like `_local_pyramid` (the shallow shared slab
+        every rank walks through).  Deeper levels are NOT all-reduced: the
+        base LevelData is the locally finalized owner-span partial — valid
+        at this rank's owned boxes for every field (owner-span partials are
+        box-atomic: the owner holds each box's full raw sum, DESIGN.md §3),
+        which is all the descent's SOURCE side ever reads.  The TARGET side
+        (the M2L interaction rows `tc`, known only once the previous level's
+        merged map exists) is fetched inside the descent by
+        `level_data_fn(level, tgt_prev)`: every rank serves the raw den-side
+        sums of the requested rows it owns (exact zeros elsewhere) and a
+        psum_scatter hands each rank the summed — i.e. bitwise the owner's —
+        raw rows, which are then finalized locally with the same elementwise
+        normalisation the dense merge applies.  Raw-sum transport + local
+        finalize keeps the §9 bitwise-parity contract intact.
+
+        The psum_scatter is a portable STAND-IN transport: XLA's static-
+        shape SPMD collectives cannot express the genuinely sparse
+        point-to-point sends of the modeled protocol, so the emulation moves
+        more bytes than the protocol it implements; `pyramid_exchange_payload`
+        counts the modeled request-routed payload (see DESIGN.md §13 for the
+        emulation-vs-model distinction).
+        """
+        cfg = self.fmm_cfg if fmm_cfg is None else fmm_cfg
+        rank = jax.lax.axis_index(self.axis)
+        ls = self.routed_shared_levels
+        k = cfg.p ** 3
+        raws = octree.build_pyramid_spans(
+            self.structure, self._spans, rank, self.positions,
+            ax_vac_g, den_vac_g, cfg.delta, cfg.p)
+        levels = []
+        for level, raw in enumerate(raws):
+            centers = jnp.asarray(self.structure.centers_at(level))
+            if level <= ls:
+                raw = tuple(jax.lax.psum(x, self.axis) for x in raw)
+            levels.append(octree.finalize_level(centers, raw, cfg.p))
+
+        def level_data_fn(level: int, tgt_prev: jnp.ndarray):
+            if level <= ls:
+                return levels[level]
+            base = levels[level]
+            den_w_r, _, den_pos_r, _, herm_r, _ = raws[level]
+            occ_ids = jnp.asarray(self._tables.occ_ids[level])   # (p, w)
+            owner = jnp.asarray(self._tables.box_owner[level])   # (8^l,)
+            ptgt = tgt_prev[occ_ids >> 3]                        # (p, w)
+            tc = (jnp.maximum(ptgt, 0)[..., None] << 3) \
+                + jnp.arange(8, dtype=jnp.int32)                 # (p, w, 8)
+            # Serve the requested raw den-side rows this rank owns; every
+            # other rank contributes exact zeros, so the scatter-sum is
+            # bitwise the owner's raw values.
+            serve = (owner[tc] == rank)[..., None]
+            payload = jnp.concatenate(
+                [den_w_r[tc][..., None], den_pos_r[tc], herm_r[tc]],
+                axis=-1)                                         # (p,w,8,4+k)
+            payload = jnp.where(serve, payload, 0.0)
+            got = jax.lax.psum_scatter(payload, self.axis,
+                                       scatter_dimension=0)      # (w,8,4+k)
+            den_w_f = got[..., 0]
+            den_c_f = got[..., 1:4] / jnp.maximum(den_w_f, 1e-30)[..., None]
+            herm_f = got[..., 4:] / jnp.asarray(
+                mi.multi_factorial(cfg.p), got.dtype)
+            idx = jax.lax.dynamic_index_in_dim(tc, rank, 0,
+                                               keepdims=False).reshape(-1)
+            # Duplicate tc rows (sources sharing a parent target) carry
+            # identical fetched values, so the overlapping .set is safe.
+            return octree.LevelData(
+                den_w=base.den_w.at[idx].set(den_w_f.reshape(-1)),
+                ax_w=base.ax_w,
+                den_c=base.den_c.at[idx].set(den_c_f.reshape(-1, 3)),
+                ax_c=base.ax_c, gc=base.gc,
+                herm=base.herm.at[idx].set(herm_f.reshape(-1, k)),
+                moms=base.moms)
+
+        return levels, level_data_fn
+
+    def pyramid_exchange_payload(self, exchange: Optional[str] = None
+                                 ) -> dict:
+        """Modeled per-device pyramid-exchange payload elements of ONE
+        connectivity update (the fig_exchange benchmark's headline counter;
+        host-independent, computed from the static layout).
+
+        gathered: every level's dense raw tuple is all-reduced — 8 scalar
+        fields + two order-k tensors per box, all 8^l boxes, every level.
+        routed: the dense slab only up to `routed_shared_levels`; deeper
+        levels move, per occupied source box a rank scores, 8 interaction
+        rows of (1 box-id request + the 4+k raw den-side response elements)
+        under the modeled request-routed protocol — each requested row is
+        paid once at the owner-sender and once at the requester-receiver,
+        and the counter reports the per-device (receiver-side) total.  The
+        in-program psum_scatter EMULATION of that protocol is accounted in
+        DESIGN.md §13; bitwise-parity canaries validate the emulation, this
+        counter tracks the model.
+        """
+        mode = self.pyramid_exchange if exchange is None else exchange
+        if mode not in ("gathered", "routed"):
+            raise ValueError(f"unknown pyramid exchange {mode!r}")
+        k = self.fmm_cfg.p ** 3
+        s = self.structure
+        per_box = 8 + 2 * k
+        if mode == "gathered":
+            dense = sum(s.boxes_at(l) * per_box for l in range(s.depth + 1))
+            return dict(pyramid_payload_elements=dense)
+        ls = self.routed_shared_levels
+        shared = sum(s.boxes_at(l) * per_box for l in range(ls + 1))
+        deep = sum(8 * self._spans.occ_width[l] * (5 + k)
+                   for l in range(ls + 1, s.depth + 1))
+        return dict(pyramid_payload_elements=shared + deep)
+
     # -- phase 3: the connectivity update, two find-phase variants -----------
     def _conn_update_replicated(self, state: SimState, *, kconn: jax.Array,
                                 params: Optional[KernelParams]) -> SimState:
@@ -251,6 +393,67 @@ class DistributedPlasticityEngine(PlasticityEngine):
         return state._replace(edges=edges_l,
                               dropped=state.dropped + dropped)
 
+    def _cond_delete(self, excess_out, excess_in, src_l, dst_l, valid_l,
+                     ax_el_g, den_el_g, kdel):
+        """The rare any-excess deletion, guarded so the O(E) edge-table
+        gather really is conditional — INCLUDING under the ensemble vmap.
+
+        The naive `lax.cond(any_excess, ...)` is correct on the 1-D mesh but
+        lowers to a select under the replica vmap of the 2-D sweep mesh,
+        resurrecting the O(E) gather every update (the DESIGN.md §10 caveat).
+        This custom_vmap keeps the branch: the batched rule reduces the
+        predicate over the WHOLE replica batch (during growth no replica has
+        excess, so the gather is skipped batch-wide), gathers the (K, E)
+        table along the data axis only when some replica does, and runs the
+        per-replica deletion via `synapses._delete_excess_valid`'s own
+        batched rule.  Replicas without excess delete nothing, so their
+        valid flags are bitwise unchanged either way.
+        """
+        axis = self.axis
+        e_local = src_l.shape[-1]
+
+        @custom_batching.custom_vmap
+        def run(excess_out, excess_in, src_l, dst_l, valid_l,
+                ax_el_g, den_el_g, kdel):
+            def with_deletion(_):
+                gather = lambda x: jax.lax.all_gather(x, axis, tiled=True)
+                new_valid = synapses._delete_excess_valid(
+                    gather(src_l), gather(dst_l), gather(valid_l),
+                    ax_el_g, den_el_g, kdel)
+                rank = jax.lax.axis_index(axis)
+                return jax.lax.dynamic_slice_in_dim(new_valid,
+                                                    rank * e_local, e_local)
+            any_excess = jnp.any(excess_out > 0) | jnp.any(excess_in > 0)
+            return jax.lax.cond(any_excess, with_deletion,
+                                lambda _: valid_l, None)
+
+        @run.def_vmap
+        def _rule(axis_size, in_batched, excess_out, excess_in, src_l, dst_l,
+                  valid_l, ax_el_g, den_el_g, kdel):
+            args = [excess_out, excess_in, src_l, dst_l, valid_l,
+                    ax_el_g, den_el_g, kdel]
+            (excess_out, excess_in, src_l, dst_l, valid_l,
+             ax_el_g, den_el_g, kdel) = [
+                a if b else jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (axis_size,) + x.shape), a)
+                for a, b in zip(args, in_batched)]
+
+            def with_deletion(_):
+                gather = lambda x: jax.lax.all_gather(x, axis, axis=1,
+                                                      tiled=True)
+                new_valid = jax.vmap(synapses._delete_excess_valid)(
+                    gather(src_l), gather(dst_l), gather(valid_l),
+                    ax_el_g, den_el_g, kdel)
+                rank = jax.lax.axis_index(axis)
+                return jax.lax.dynamic_slice_in_dim(
+                    new_valid, rank * e_local, e_local, axis=1)
+            any_excess = jnp.any(excess_out > 0) | jnp.any(excess_in > 0)
+            return jax.lax.cond(any_excess, with_deletion,
+                                lambda _: valid_l, None), True
+
+        return run(excess_out, excess_in, src_l, dst_l, valid_l,
+                   ax_el_g, den_el_g, kdel)
+
     def _conn_update_sharded(self, state: SimState, *, kconn: jax.Array,
                              params: Optional[KernelParams]) -> SimState:
         """Sharded find phase (the default; DESIGN.md §10).
@@ -258,16 +461,17 @@ class DistributedPlasticityEngine(PlasticityEngine):
         Per device and update: the descent scores only the occupied boxes it
         owns (per-level (8^l,) dense-map merge by exact integer psum of
         disjoint scatters), leaf resolution runs only over its owned neuron
-        rows, and the request exchange moves the (n,) partner/request
-        vectors — O(n) ints — instead of the O(E) edge table; conflict
-        resolution is replicated on the gathered requests (deterministic
-        global priority bits from the shared key) and the commit is
+        rows, and the request exchange moves the (n,) partner vector — O(n)
+        ints — instead of the O(E) edge table; conflict resolution sorts
+        only this rank's owned rows and merges by a p-way splitter exchange
+        that reproduces the replicated deterministic order exactly
+        (synapses.resolve_conflicts_span, DESIGN.md §13), and the commit is
         slot-range-owned (synapses.insert_span + a (p,)-int free-count
         exchange).  Deletion degrees come from integer psums; the edge-table
         gather survives ONLY on the rare any-excess deletion path, under a
-        lax.cond (during growth no neuron has excess).  Every collective is
-        exact, so the result is bitwise identical to the replicated path —
-        and hence to single-device `PlasticityEngine.simulate`."""
+        batch-robust cond (`_cond_delete`).  Every collective is exact, so
+        the result is bitwise identical to the replicated path — and hence
+        to single-device `PlasticityEngine.simulate`."""
         axis, n, p = self.axis, self.n, self.num_shards
         rank = jax.lax.axis_index(axis)
         n_local = n // p
@@ -290,18 +494,9 @@ class DistributedPlasticityEngine(PlasticityEngine):
         excess_in = jnp.maximum(
             in_deg - jnp.floor(den_el_g).astype(jnp.int32), 0)
 
-        def with_deletion(edges: synapses.SynapseState) -> jnp.ndarray:
-            edges_g = synapses.SynapseState(*(gather(x) for x in edges))
-            new_valid = synapses._delete_excess_valid(
-                edges_g.src, edges_g.dst, edges_g.valid, ax_el_g, den_el_g,
-                kdel)
-            e_local = edges.src.shape[0]
-            return jax.lax.dynamic_slice_in_dim(new_valid, rank * e_local,
-                                                e_local)
-
-        any_excess = jnp.any(excess_out > 0) | jnp.any(excess_in > 0)
-        valid_l = jax.lax.cond(any_excess, with_deletion,
-                               lambda e: e.valid, state.edges)
+        valid_l = self._cond_delete(excess_out, excess_in, state.edges.src,
+                                    state.edges.dst, state.edges.valid,
+                                    ax_el_g, den_el_g, kdel)
         edges = state.edges._replace(valid=valid_l)
 
         # --- vacancies from post-deletion psummed degrees (replicated) ---
@@ -313,14 +508,18 @@ class DistributedPlasticityEngine(PlasticityEngine):
                               ).astype(jnp.float32)
 
         fmm_cfg = self._runtime_fmm_cfg(params)
-        levels = self._local_pyramid(ax_vac, den_vac, fmm_cfg)
         merge = lambda x: jax.lax.psum(x, axis)
+        level_fn = None
+        if self.pyramid_exchange == "routed":
+            levels, level_fn = self._routed_pyramid(ax_vac, den_vac, fmm_cfg)
+        else:
+            levels = self._local_pyramid(ax_vac, den_vac, fmm_cfg)
         if self.engine_cfg.method == "fmm":
             partner_l = traversal.find_partners_sharded(
                 self.structure, self._spans, rank, levels, self.positions,
                 ax_vac, den_vac, kfind, fmm_cfg, merge,
                 row_start=lo, row_count=n_local,
-                backend=self.engine_cfg.backend)
+                backend=self.engine_cfg.backend, level_data_fn=level_fn)
         else:
             partner_l = barnes_hut.find_partners_bh(
                 self.structure, levels, self.positions, ax_vac, den_vac,
@@ -332,9 +531,12 @@ class DistributedPlasticityEngine(PlasticityEngine):
         req_l = jnp.where(partner_l >= 0, req_l, 0)
         # Request exchange: O(n) ints — the accepted requests, not the table.
         partner = gather(partner_l)
-        req = gather(req_l)
-        accepted = synapses.resolve_conflicts(
-            partner, req, den_vac.astype(jnp.int32), kconf)
+        # Conflict resolution sorts only this rank's owned rows; the p-way
+        # splitter merge reproduces the replicated deterministic tie-break
+        # order exactly (synapses.resolve_conflicts_span, DESIGN.md §13).
+        accepted = synapses.resolve_conflicts_span(
+            partner_l, req_l, den_vac.astype(jnp.int32), kconf,
+            rank=rank, num_shards=p, gather=gather)
         # Slot-range-owned commit: continue the global free-slot order from
         # the lower ranks' free counts (one (p,)-int exchange).
         free_counts = jax.lax.all_gather(
@@ -359,14 +561,20 @@ class DistributedPlasticityEngine(PlasticityEngine):
                           the descended neuron rows instead.
         resolution_rows:  neuron rows of the (rows, max_leaf) leaf-resolve
                           slab this device evaluates.
+        conflict_rows:    request rows this device sorts during conflict
+                          resolution — n replicated, n/p under the sharded
+                          splitter merge (synapses.resolve_conflicts_span).
         payload_elems:    elements entering update-phase collectives —
                           element-count gathers, degree psums, descent-map
                           psums (fmm only; the BH descent merges nothing),
-                          the request exchange, and the commit counters;
-                          for the replicated phase, the edge-table gather.
-                          The pyramid psums are identical in both modes and
-                          excluded.  The sharded phase's rare any-excess
-                          deletion gather is reported separately
+                          the request exchange, the conflict splitter
+                          exchange (sorted runs + counts + the accepted
+                          gather), and the commit counters; for the
+                          replicated phase, the edge-table gather.  The
+                          pyramid exchange is counted separately
+                          (`pyramid_exchange_payload`) and excluded here.
+                          The sharded phase's rare any-excess deletion
+                          gather is reported separately
                           (payload_elems_deletion_path).
         """
         mode = self.find_phase if find_phase is None else find_phase
@@ -377,6 +585,7 @@ class DistributedPlasticityEngine(PlasticityEngine):
         if mode == "replicated":
             return dict(descent_boxes=self.n if bh else occ_total,
                         resolution_rows=self.n,
+                        conflict_rows=self.n,
                         payload_elems=3 * self.edge_capacity + 2 * self.n,
                         payload_elems_deletion_path=0)
         n_local = self.n // self.num_shards
@@ -385,10 +594,12 @@ class DistributedPlasticityEngine(PlasticityEngine):
             descent_boxes=(n_local if bh
                            else self._spans.descent_boxes_per_device),
             resolution_rows=n_local,
+            conflict_rows=n_local,
             payload_elems=(2 * self.n          # element-count gathers
                            + 4 * self.n        # degree psums (pre + post)
                            + maps              # descent dense-map psums
-                           + 2 * self.n        # request exchange
+                           + self.n            # request exchange (partner)
+                           + 4 * self.n        # conflict splitter merge
                            + self.num_shards + 1),   # free counts + placed
             payload_elems_deletion_path=3 * self.edge_capacity)
 
@@ -532,12 +743,13 @@ class DistributedEnsembleEngine:
             `ensemble_axis` (launch/mesh.make_sweep_mesh).  The ensemble
             axis size must divide the replica count K
             (K % mesh.shape[ensemble_axis] == 0).  The engine's
-            `pyramid_partials` and `find_phase` knobs ride along unchanged
-            (launch/sweep.make_ensemble threads them when rewrapping a
-            plain engine); note that under the replica vmap the sharded
-            find phase's rare-deletion cond lowers to a select, so its
-            O(E) gather branch executes every update (correct, but see
-            DESIGN.md §10 for the known follow-up).
+            `pyramid_partials`, `find_phase`, and `pyramid_exchange` knobs
+            ride along unchanged (launch/sweep.make_ensemble threads them
+            when rewrapping a plain engine).  The sharded find phase's
+            rare-deletion branch stays a genuine `lax.cond` under the
+            replica vmap (`_cond_delete`'s batch-reduced predicate), so the
+            O(E) edge-table gather is skipped whenever NO replica has
+            excess — the former §10 caveat is closed (DESIGN.md §13).
     """
 
     def __init__(self, engine: DistributedPlasticityEngine,

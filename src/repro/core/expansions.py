@@ -240,17 +240,28 @@ def box_mass_direct_log(axon_count, axon_centroid, dendrite_weight,
 
 
 def box_mass_hermite_log(axon_count, axon_centroid, hermite_coeff,
-                         dendrite_centroid, delta, p: int = DEFAULT_ORDER):
+                         dendrite_centroid, delta, p: int = DEFAULT_ORDER,
+                         backend: str = "reference"):
     """log of `box_mass_hermite`, batched over leading axes.
 
     hermite_coeff: (..., k).  centroids: (..., 3).
+
+    Evaluating the dendrite Hermite series at the axon centroid IS the M2L
+    series with a one-hot zeroth axon moment: with moms = e_0 the separable
+    translation collapses to sum_alpha A_alpha (-1)^{|alpha|} H_alpha(y) with
+    y = (tC - sC)/sqrt(delta), and Hermite parity H_alpha(-y) =
+    (-1)^{|alpha|} H_alpha(y) turns that into
+    sum_alpha A_alpha H_alpha((sC - tC)/sqrt(delta)) — exactly the Eq. 7
+    series at the centroid (the envelope -||y||^2 is parity-even).  The
+    Hermite tier therefore shares one arithmetic path — and one kernel —
+    with the Taylor tier: backend="pallas"/"auto" routes through
+    ops.m2l_separable (DESIGN.md §11).
     """
-    y = (axon_centroid - dendrite_centroid) / jnp.sqrt(delta)
-    polys = mi.hermite_polys(y, p)                        # (..., k)
-    series = jnp.sum(polys * hermite_coeff, axis=-1)
+    e0 = jnp.zeros((p ** 3,), jnp.asarray(hermite_coeff).dtype).at[0].set(1.0)
     return (jnp.log(jnp.maximum(axon_count, LOG_EPS))
-            - jnp.sum(y * y, axis=-1)
-            + jnp.log(jnp.maximum(series, LOG_EPS)))
+            + box_mass_taylor_log(e0, axon_centroid, hermite_coeff,
+                                  dendrite_centroid, delta, p,
+                                  backend=backend))
 
 
 def box_mass_taylor_log_dense(axon_moms, axon_centroid, hermite_coeff,

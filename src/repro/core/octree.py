@@ -445,6 +445,61 @@ def build_pyramid_spans(structure: OctreeStructure, spans: OwnerSpans,
     return raws
 
 
+@dataclasses.dataclass(frozen=True)
+class RoutedTables:
+    """Static request tables for the request-routed pyramid exchange
+    (DESIGN.md §13).
+
+    Derived once in numpy from (structure, spans).  For each level l:
+
+      * ``occ_ids[l]`` (num_shards, occ_width[l]) int32 — the exact padded
+        occupied-box slice each rank scores in the sharded descent (the
+        clamped dynamic slice of `traversal.descend_level_partial`,
+        precomputed per rank).  Row r lists the level-l source boxes whose
+        interaction children rank r will request — the static per-level
+        neighbour-request table.
+      * ``box_owner[l]`` (8^l,) int32 — the owner rank of every occupied
+        box (first-member ownership, the same map `owner_spans` shards by);
+        -1 at unoccupied boxes.  A sender masks its dense raw slab with
+        ``box_owner[tc] == rank``, so each requested row is served by
+        exactly one owner and everyone else contributes exact zeros — the
+        merged raw sums are bitwise the owner's values (DESIGN.md §3).
+    """
+    num_shards: int
+    occ_ids: Tuple[np.ndarray, ...]
+    box_owner: Tuple[np.ndarray, ...]
+
+
+def routed_tables(structure: OctreeStructure, spans: OwnerSpans
+                  ) -> RoutedTables:
+    """Static per-level request/owner tables for ``pyramid_exchange="routed"``.
+
+    Pure numpy on the static layout — positions never move, so which boxes a
+    rank scores (and who owns each box) is known before the first step; only
+    the raw SUMS move at run time, never indices.
+    """
+    n = structure.n
+    n_local = n // spans.num_shards
+    occ_ids: List[np.ndarray] = []
+    box_owner: List[np.ndarray] = []
+    for level in range(structure.depth + 1):
+        ids = structure.box_of(level)
+        first = np.r_[True, ids[1:] != ids[:-1]]
+        first_idx = np.maximum.accumulate(np.where(first, np.arange(n), 0))
+        occ_owner = (first_idx[first] // n_local).astype(np.int32)
+        occ = structure.occupied_at(level)
+        num_occ = occ.shape[0]
+        width = spans.occ_width[level]
+        base = np.clip(spans.occ_start[level], 0, max(num_occ - width, 0))
+        rows = base[:, None] + np.arange(width)[None, :]
+        occ_ids.append(occ[rows].astype(np.int32))
+        dense = np.full(structure.boxes_at(level), -1, np.int32)
+        dense[occ] = occ_owner
+        box_owner.append(dense)
+    return RoutedTables(num_shards=spans.num_shards,
+                        occ_ids=tuple(occ_ids), box_owner=tuple(box_owner))
+
+
 def build_pyramid_m2m(structure: OctreeStructure, positions: jnp.ndarray,
                       ax_vac: jnp.ndarray, den_vac: jnp.ndarray, delta: float,
                       p: int = DEFAULT_ORDER) -> List[LevelData]:

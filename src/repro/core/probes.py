@@ -265,26 +265,25 @@ class ProbeWriter:
     simply overwritten when the same chunk is completed later — restore
     mid-chunk re-flushes dedupe by construction, no rows duplicated or
     dropped (tests/test_probes.py::test_restore_mid_chunk).
+
+    Ensemble runs flush the batched probe state directly: a state whose
+    leaves carry a leading replica axis (cursor.ndim == 1) is split by the
+    writer itself into per-replica files `chunk_<step0>_r<k>.npz` — same
+    schema per file, same atomic publish, same overwrite-on-restore
+    semantics.  Callers never hand-slice the replica axis;
+    `read_trajectory(..., replica=k)` reads one replica's stream back.
     """
 
     def __init__(self, directory: str):
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
 
-    def flush(self, probe_set: ProbeSet, ps: ProbeState) -> Optional[str]:
-        if ps.cursor.ndim:
-            raise NotImplementedError(
-                "ProbeWriter flushes unbatched probe states; ensemble "
-                "runs flush per replica (index the leading axis first)"
-            )
-        rows = min(int(ps.cursor), probe_set.chunk_size)
-        if rows == 0:
-            return None
-        step0 = int(ps.step0)
+    def _publish(self, fname: str, rows: int, step0: int,
+                 buffers: Dict[str, np.ndarray]) -> str:
         arrays = {"__step0": np.int64(step0), "__rows": np.int64(rows)}
-        for name, buf in ps.buffers.items():
+        for name, buf in buffers.items():
             arrays[name] = np.asarray(buf[:rows])
-        final = os.path.join(self.directory, f"chunk_{step0:09d}.npz")
+        final = os.path.join(self.directory, fname)
         tmp = final + ".tmp"
         with open(tmp, "wb") as f:
             np.savez(f, **arrays)
@@ -293,19 +292,56 @@ class ProbeWriter:
         os.replace(tmp, final)
         return final
 
+    def flush(self, probe_set: ProbeSet, ps: ProbeState):
+        """Write the current chunk; returns the published path (unbatched),
+        a list of per-replica paths (batched), or None if the chunk is
+        empty."""
+        if ps.cursor.ndim > 1:
+            raise NotImplementedError(
+                "ProbeWriter flushes at most one leading replica axis; "
+                f"got cursor of rank {ps.cursor.ndim}")
+        if ps.cursor.ndim == 1:
+            cursors = np.asarray(ps.cursor)
+            step0s = np.asarray(ps.step0)
+            buffers = {k: np.asarray(v) for k, v in ps.buffers.items()}
+            paths = []
+            for k in range(cursors.shape[0]):
+                rows = min(int(cursors[k]), probe_set.chunk_size)
+                if rows == 0:
+                    continue
+                paths.append(self._publish(
+                    f"chunk_{int(step0s[k]):09d}_r{k}.npz", rows,
+                    int(step0s[k]), {n: b[k] for n, b in buffers.items()}))
+            return paths or None
+        rows = min(int(ps.cursor), probe_set.chunk_size)
+        if rows == 0:
+            return None
+        step0 = int(ps.step0)
+        return self._publish(f"chunk_{step0:09d}.npz", rows, step0,
+                             ps.buffers)
 
-def read_trajectory(directory: str, name: str) -> Tuple[np.ndarray, np.ndarray]:
+
+def read_trajectory(directory: str, name: str,
+                    replica: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
     """Concatenate one probe's rows across all chunk files.
 
     Returns (steps, values): (T,) int64 global step numbers (contiguous for
     an uninterrupted run) and the (T, *row_shape) recorded rows, ordered by
-    step.
+    step.  replica selects one stream of a batched (ensemble) flush
+    (`chunk_*_r<k>.npz` files); None reads the unbatched `chunk_*.npz`
+    stream.
     """
+    suffix = ".npz" if replica is None else f"_r{replica}.npz"
+    is_replica_file = lambda f: f.rsplit(".", 1)[0].rpartition("_")[2].startswith("r")
     files = sorted(
-        f for f in os.listdir(directory) if f.startswith("chunk_") and f.endswith(".npz")
+        f for f in os.listdir(directory)
+        if f.startswith("chunk_") and f.endswith(suffix)
+        and (replica is not None or not is_replica_file(f))
     )
     if not files:
-        raise FileNotFoundError(f"no chunk files in {directory}")
+        raise FileNotFoundError(
+            f"no chunk files in {directory}"
+            + (f" for replica {replica}" if replica is not None else ""))
     steps, values = [], []
     for fname in files:
         with np.load(os.path.join(directory, fname)) as data:

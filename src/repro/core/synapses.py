@@ -221,6 +221,99 @@ def resolve_conflicts(partner: jnp.ndarray, request_cnt: jnp.ndarray,
     return jnp.where(valid, accepted, 0).astype(jnp.int32)
 
 
+def resolve_conflicts_span(partner_l: jnp.ndarray, request_cnt_l: jnp.ndarray,
+                           den_capacity: jnp.ndarray, key: jax.Array, *,
+                           rank: jnp.ndarray, num_shards: int,
+                           gather) -> jnp.ndarray:
+    """`resolve_conflicts` with the O(n log n) sort sharded by row ownership
+    (DESIGN.md §13).
+
+    Device r owns the contiguous request rows [r*m, (r+1)*m), m = n/p.  It
+    draws the SAME full-shape priority slab as the replicated path and slices
+    its rows (bit-identical draws), sorts only those m rows, and recovers
+    each row's global within-segment position by a p-way splitter merge:
+    every rank publishes its sorted (seg, prio) runs plus inclusive request
+    counts (one all_gather of 3m ints per rank), and each row binary-searches
+    the other ranks' runs for the requests ahead of it.
+
+    The replicated order is a stable sort by (seg, prio, original row), and
+    rows are rank-major, so a cross-rank (seg, prio) tie resolves by rank:
+    rank r' counts its equal-key rows ahead of mine iff r' < r.  The local
+    stable lexsort preserves same-rank tie order, and every quantity is an
+    integer, so `before` — and hence the clip(cap - before, 0, cnt)
+    acceptance — reproduces the replicated result EXACTLY.
+
+    partner_l/request_cnt_l: this rank's (m,) request rows.
+    den_capacity: the replicated (n,) int vacancy budget.
+    key: the same key the replicated path would use.
+    gather: tiled all_gather along the data axis ((m,) -> (p*m,)).
+    Returns the replicated (n,) accepted counts, bitwise equal to
+    `resolve_conflicts` on the gathered requests.
+    """
+    n = den_capacity.shape[0]
+    m = partner_l.shape[0]
+    valid_l = partner_l >= 0
+    seg_l = jnp.where(valid_l, partner_l, n)
+    prio_full = jax.random.bits(key, (n,), jnp.uint32)
+    prio_l = jax.lax.dynamic_slice_in_dim(prio_full, rank * m, m)
+    cnt_l = jnp.where(valid_l, request_cnt_l, 0)
+
+    order = jnp.lexsort((prio_l, seg_l))
+    seg_s = seg_l[order]
+    prio_s = prio_l[order]
+    cnt_s = cnt_l[order]
+
+    # Requests ahead of me among MY OWN rows (the replicated cum/base
+    # formula, restricted to this rank's sorted rows).
+    cum = jnp.cumsum(cnt_s) - cnt_s
+    is_first = jnp.concatenate([jnp.ones((1,), bool), seg_s[1:] != seg_s[:-1]])
+    base = jax.lax.cummax(jnp.where(is_first, cum, 0))
+    before = cum - base
+
+    # Splitter exchange: sorted runs + inclusive counts from every rank.
+    seg_g = gather(seg_s).reshape(num_shards, m)
+    prio_g = gather(prio_s).reshape(num_shards, m)
+    ccnt_g = gather(jnp.cumsum(cnt_s)).reshape(num_shards, m)
+
+    # For each of my sorted rows, count rank r''s SAME-SEGMENT requests ahead
+    # of it: a lexicographic binary search for the number of r''s rows with
+    # (seg, prio) < mine — or <= mine when r' < rank (the rank tie-break) —
+    # minus a second search for the rows in strictly earlier segments.
+    q_seg = seg_s[None, :]                                     # (1, m)
+    q_prio = prio_s[None, :]
+
+    def count_keys_below(q_prio_row, incl_eq):
+        lo = jnp.zeros((num_shards, m), jnp.int32)
+        hi = jnp.full((num_shards, m), m, jnp.int32)
+        for _ in range(max(m, 1).bit_length()):
+            mid = (lo + hi) >> 1
+            probe = jnp.minimum(mid, m - 1)
+            s = jnp.take_along_axis(seg_g, probe, axis=1)
+            pr = jnp.take_along_axis(prio_g, probe, axis=1)
+            less = (s < q_seg) | ((s == q_seg) & (pr < q_prio_row))
+            eq = (s == q_seg) & (pr == q_prio_row)
+            go = (less | (incl_eq & eq)) & (mid < hi)
+            lo = jnp.where(go, mid + 1, lo)
+            hi = jnp.where(go, hi, mid)
+        return jnp.where(
+            lo > 0,
+            jnp.take_along_axis(ccnt_g, jnp.maximum(lo - 1, 0), axis=1), 0)
+
+    incl = (jnp.arange(num_shards, dtype=jnp.int32)
+            < rank.astype(jnp.int32))[:, None]                 # (p, 1)
+    at_me = count_keys_below(q_prio, incl)
+    seg_start = count_keys_below(jnp.zeros_like(q_prio), False)
+    others = jnp.arange(num_shards, dtype=jnp.int32)[:, None] \
+        != rank.astype(jnp.int32)
+    before = before + jnp.sum(jnp.where(others, at_me - seg_start, 0), axis=0)
+
+    cap = jnp.where(seg_s < n, den_capacity[jnp.minimum(seg_s, n - 1)], 0)
+    acc_s = jnp.clip(cap - before, 0, cnt_s)
+    accepted_l = jnp.zeros((m,), acc_s.dtype).at[order].set(acc_s)
+    accepted_l = jnp.where(valid_l, accepted_l, 0).astype(jnp.int32)
+    return gather(accepted_l)
+
+
 def _stage_units(partner: jnp.ndarray, accepted: jnp.ndarray,
                  max_per_neuron: int):
     """Dense (n*k,) staging buffers of the accepted unit edges, in global

@@ -99,9 +99,11 @@ def _tier_log_masses(child_ax_w, child_ax_c, child_gc, child_moms,
     Expansions are anchored at the static geometric centers `gc`.
     Returns (B, 8) log attraction masses.
 
-    backend: routed to the Taylor tier only (expansions.box_mass_taylor_log
-    -> the m2l_pair kernel; DESIGN.md §11).  The direct and Hermite tiers are
-    O(k)-per-pair vector ops with no kernel counterpart.
+    backend: routed to the Taylor AND Hermite tiers — both evaluate through
+    expansions.box_mass_taylor_log (the Hermite tier is the M2L series with a
+    one-hot zeroth moment) -> the m2l_pair kernel (DESIGN.md §11).  The
+    direct tier and the Barnes–Hut accept path are O(1)-per-pair log-space
+    vector ops with nothing Σ-shaped to route.
     """
     delta = cfg.delta
     ax_w = child_ax_w[:, None]                                    # (B,1)
@@ -115,7 +117,8 @@ def _tier_log_masses(child_ax_w, child_ax_c, child_gc, child_moms,
     # Hermite tier: dendrite expansion (about tgt_gc) evaluated at the axon
     # mass centroid, weighted by the axon count.
     log_hermite = ex.box_mass_hermite_log(ax_w, ax_c, tgt_herm, tgt_gc,
-                                          delta, cfg.p)           # (B,8)
+                                          delta, cfg.p,
+                                          backend=backend)        # (B,8)
 
     def taylor_chunked():
         def one_chunk(args):
@@ -255,7 +258,8 @@ def descend_level_partial(structure: OctreeStructure, spans, rank: jnp.ndarray,
 
 def descend_sharded(structure: OctreeStructure, spans, rank: jnp.ndarray,
                     levels: List[LevelData], key: jax.Array, cfg: FMMConfig,
-                    merge, backend: str = "reference") -> jnp.ndarray:
+                    merge, backend: str = "reference",
+                    level_data_fn=None) -> jnp.ndarray:
     """The full descent with per-level owner-span sharding (DESIGN.md §10).
 
     merge: callable summing a (8^level,) int32 partial across ranks —
@@ -263,14 +267,23 @@ def descend_sharded(structure: OctreeStructure, spans, rank: jnp.ndarray,
     adding sequentially computed per-rank partials.  Integer addition of
     disjoint scatters is exact, so the returned (8^depth,) map is bitwise
     identical to the replicated `descend` for any shard count.
+
+    level_data_fn: optional `(level, tgt_prev) -> LevelData` override used by
+    the request-routed pyramid exchange (DESIGN.md §13).  The interaction
+    boxes a level needs (`tc`) depend on the PREVIOUS level's merged target
+    map, so the exchange has to happen inside the descent: when provided,
+    the callback supplies each level's data — fetching the deep M2L rows
+    from their owners on the fly — in place of the prefetched `levels[l]`.
     """
     # Level 0: the root's (only) pair is a replicated scalar decision.
     tgt = jnp.zeros((1,), jnp.int32)
     active = (levels[0].ax_w > 0) & (levels[0].den_w > 0)
     tgt = jnp.where(active, tgt, -1)
     for level in range(1, structure.depth + 1):
+        nxt = levels[level] if level_data_fn is None \
+            else level_data_fn(level, tgt)
         partial = descend_level_partial(structure, spans, rank, level,
-                                        levels[level], tgt, key, cfg,
+                                        nxt, tgt, key, cfg,
                                         backend=backend)
         tgt = merge(partial) - 1
     return tgt
@@ -362,17 +375,19 @@ def find_partners_sharded(structure: OctreeStructure, spans,
                           den_vac: jnp.ndarray, key: jax.Array,
                           cfg: FMMConfig, merge, *, row_start: jnp.ndarray,
                           row_count: int,
-                          backend: str = "reference") -> jnp.ndarray:
+                          backend: str = "reference",
+                          level_data_fn=None) -> jnp.ndarray:
     """Sharded `find_synapses`: owner-span descent + local-row leaf resolve.
 
     Returns the (row_count,) partner requests of the neuron rows
     [row_start, row_start + row_count) — bitwise equal to that slice of
     `find_partners` on one device, for any shard count (DESIGN.md §10).
-    merge: the per-level descent-map reducer (see `descend_sharded`).
+    merge: the per-level descent-map reducer (see `descend_sharded`);
+    level_data_fn: optional routed-exchange level supplier (DESIGN.md §13).
     """
     k1, k2 = jax.random.split(key)
     tgt_leaf = descend_sharded(structure, spans, rank, levels, k1, cfg, merge,
-                               backend=backend)
+                               backend=backend, level_data_fn=level_data_fn)
     leaf_ids = jax.lax.dynamic_slice_in_dim(
         jnp.asarray(structure.leaf_of, jnp.int32), row_start, row_count)
     my_tgt = tgt_leaf[leaf_ids]

@@ -71,7 +71,8 @@ def pack_params(engine: PlasticityEngine,
 
 def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
                   pyramid_partials: Optional[str] = None,
-                  find_phase: Optional[str] = None):
+                  find_phase: Optional[str] = None,
+                  pyramid_exchange: Optional[str] = None):
     """Pick the ensemble engine for `mesh`.
 
     None or a replica-only mesh (launch.mesh.make_ensemble_mesh) -> a plain
@@ -93,11 +94,14 @@ def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
     partials) or "masked" (legacy O(n)-per-level global masking); find_phase
     selects the connectivity-update decomposition: "sharded" (default,
     owner-span descent + O(n) request exchange) or "replicated" (legacy
-    O(E) edge-table gather).  All four combinations are bitwise identical
-    to the single-device engine (DESIGN.md §9, §10), so the knobs move wall
-    time/memory/collective payload only, never results.  An engine that is
-    already distributed carries its own knobs; passing a CONFLICTING value
-    here raises rather than silently measuring the wrong variant.
+    O(E) edge-table gather); pyramid_exchange selects the cross-device
+    pyramid merge: "gathered" (default, dense per-level psum) or "routed"
+    (shallow shared slab + per-level owner-routed deep fetch, DESIGN.md
+    §13).  Every combination is bitwise identical to the single-device
+    engine (DESIGN.md §9, §10, §13), so the knobs move wall time/memory/
+    collective payload only, never results.  An engine that is already
+    distributed carries its own knobs; passing a CONFLICTING value here
+    raises rather than silently measuring the wrong variant.
     """
     from repro.core.distributed import (DistributedEnsembleEngine,
                                         DistributedPlasticityEngine)
@@ -110,7 +114,9 @@ def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
         for knob, want, have in (
                 ("pyramid_partials", pyramid_partials,
                  engine.pyramid_partials),
-                ("find_phase", find_phase, engine.find_phase)):
+                ("find_phase", find_phase, engine.find_phase),
+                ("pyramid_exchange", pyramid_exchange,
+                 engine.pyramid_exchange)):
             if want is not None and want != have:
                 raise ValueError(
                     f"engine was built with {knob}={have!r}; rebuild the "
@@ -122,7 +128,8 @@ def make_ensemble(engine: PlasticityEngine, mesh: Optional[Mesh] = None,
             engine.positions_np, mesh, "data", engine.msp_cfg,
             engine.fmm_cfg, engine.engine_cfg,
             pyramid_partials=pyramid_partials or "owner_span",
-            find_phase=find_phase or "sharded")
+            find_phase=find_phase or "sharded",
+            pyramid_exchange=pyramid_exchange or "gathered")
         return DistributedEnsembleEngine(engine)
     return EnsembleEngine(engine, mesh=mesh)
 

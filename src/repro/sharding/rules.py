@@ -214,8 +214,10 @@ def pyramid_input_spec() -> P:
     replicated, as closed-over host constants: every device holds the whole
     (depth+1, p) table and selects its column by data-axis rank inside
     shard_map (octree.build_pyramid_spans, DESIGN.md §9).  The hierarchical
-    request-routed exchange that drops the replication for 1000+ devices is
-    DESIGN.md §4's open variant.
+    request-routed exchange that drops the replication for 1000+ devices
+    ships as `pyramid_exchange="routed"` (DESIGN.md §13); its static
+    request tables (octree.routed_tables) ride as closed-over host
+    constants exactly like the span tables here, so no new spec is needed.
     """
     return P()
 

@@ -88,6 +88,20 @@ def test_taylor_tier_parity():
     assert int(np.asarray(recs_pal.num_synapses)[-1]) > 0
 
 
+def test_hermite_tier_parity():
+    """Force tier_mode="hermite": the Hermite tier now evaluates through
+    the same m2l_pair kernel (box_mass_hermite_log is the M2L series with a
+    one-hot zeroth moment — DESIGN.md §11), so backend="pallas" must keep
+    engine-level parity with the kernel demonstrably inside the descent."""
+    fmm_cfg = FMMConfig(c1=8, c2=8, tier_mode="hermite")
+    base = EngineConfig(method="fmm", depth=2)
+    _, recs_ref = _run(dataclasses.replace(base, backend="reference"),
+                       fmm_cfg)
+    _, recs_pal = _run(dataclasses.replace(base, backend="pallas"), fmm_cfg)
+    _assert_parity(recs_ref, recs_pal, "hermite tier")
+    assert int(np.asarray(recs_pal.num_synapses)[-1]) > 0
+
+
 def test_auto_backend_on_cpu_matches_reference():
     """backend="auto" off-TPU must take the reference path exactly (the
     zero-overhead default for CPU CI)."""

@@ -2,8 +2,10 @@
 
 Exercises the gate on synthetic result trees — pass, warn band, >2x fail,
 the *per_s rate exclusion, the sub-noise-floor skip, the --exclude-pr
-self-comparison guard, and the no-baseline first-PR case.  The real gate
-runs in the CI bench-smoke job right after benchmarks.run (DESIGN.md §11).
+self-comparison guard, the no-baseline first-PR case, and the exact
+counter-metric rules (*_elements/*_payload keys: no noise floor, tight
+fail ratio — DESIGN.md §13).  The real gate runs in the CI bench-smoke
+job right after benchmarks.run (DESIGN.md §11).
 """
 import importlib.util
 import json
@@ -71,6 +73,52 @@ def test_rate_regression_is_not_a_time_regression(tmp_path):
     base = {"fig": {"replicas_per_s": 40.0}}
     fresh = {"fig": {"replicas_per_s": 400.0}}  # 10x MORE throughput
     assert gate.main(_setup(tmp_path, base, fresh)) == 0
+
+
+def test_counter_metrics_selects_counters_not_times():
+    tree = {"fig": {"_wall_s": 3.0, "payload_elements": 4096.0,
+                    "exchange_payload": 128,
+                    "nested": {"pyramid_payload_elements": 96},
+                    "elements_per_s": 1e6, "bitwise": True}}
+    got = dict(gate.counter_metrics(tree))
+    assert got == {"fig.payload_elements": 4096.0,
+                   "fig.exchange_payload": 128.0,
+                   "fig.nested.pyramid_payload_elements": 96.0}
+
+
+def test_counter_regression_fails_below_time_noise_floor(tmp_path, capsys):
+    """Counters are exact — a regression fails even where a timing of the
+    same magnitude would be skipped as noise, and even inside the 2x
+    wall-time tolerance."""
+    base = {"fig": {"payload_elements": 1000}}
+    fresh = {"fig": {"payload_elements": 1100}}  # 1.1x: within time warn band
+    assert gate.main(_setup(tmp_path, base, fresh)) == 1
+    assert "payload_elements" in capsys.readouterr().err
+
+
+def test_counter_flat_passes(tmp_path):
+    res = {"fig": {"payload_elements": 1000, "_wall_s": 1.0}}
+    assert gate.main(_setup(tmp_path, res, res)) == 0
+
+
+def test_counter_zero_baseline_growth_fails(tmp_path, capsys):
+    base = {"fig": {"gather_payload": 0}}
+    fresh = {"fig": {"gather_payload": 64}}
+    assert gate.main(_setup(tmp_path, base, fresh)) == 1
+    assert "gather_payload" in capsys.readouterr().err
+
+
+def test_counter_improvement_passes(tmp_path):
+    base = {"fig": {"payload_elements": 1000}}
+    fresh = {"fig": {"payload_elements": 250}}
+    assert gate.main(_setup(tmp_path, base, fresh)) == 0
+
+
+def test_counter_fail_ratio_flag(tmp_path):
+    base = {"fig": {"payload_elements": 1000}}
+    fresh = {"fig": {"payload_elements": 1100}}
+    assert gate.main(_setup(tmp_path, base, fresh)
+                     + ["--counter-fail-ratio", "1.2"]) == 0
 
 
 def test_exclude_pr_skips_run_under_test(tmp_path):

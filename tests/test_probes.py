@@ -303,11 +303,46 @@ def test_probe_set_validation():
     eng = _engine(n=32)
     pset = _pset(n=32)
     batched = pset.init(32, batch=2)
-    with pytest.raises(NotImplementedError, match="per replica"):
-        probes.ProbeWriter("/tmp/unused_probe_dir").flush(pset, batched)
+    overbatched = jax.tree.map(lambda x: x[None], batched)
+    with pytest.raises(NotImplementedError, match="replica axis"):
+        probes.ProbeWriter("/tmp/unused_probe_dir").flush(pset, overbatched)
     with pytest.raises(ValueError, match="unbatched"):
         bstate = jax.tree.map(lambda x: jnp.stack([x, x]), eng.init_state())
         probes.simulate_chunked(eng, bstate, jax.random.key(0), 10, pset)
+
+
+def test_writer_flushes_replicas_itself(tmp_path):
+    """Batched (ensemble) probe states flush straight through ProbeWriter:
+    one chunk_<step0>_r<k>.npz per replica, each bitwise equal to flushing
+    the hand-sliced replica state, and read back via replica=k."""
+    from repro.core.ensemble import EnsembleEngine
+
+    eng = _engine()
+    ens = EnsembleEngine(eng)
+    keys = jax.random.split(jax.random.key(11), 2)
+    pset = _pset()
+    _, _, pss = ens.simulate(
+        ens.init_states(2), keys, 120, None, pset, pset.init(eng.n, batch=2)
+    )
+
+    out = str(tmp_path / "batched")
+    paths = probes.ProbeWriter(out).flush(pset, pss)
+    assert [os.path.basename(p) for p in paths] == [
+        "chunk_000000001_r0.npz", "chunk_000000001_r1.npz"]
+
+    ref = str(tmp_path / "sliced")
+    for r in range(2):
+        probes.ProbeWriter(ref).flush(pset, jax.tree.map(lambda x: x[r], pss))
+        steps, calcium = probes.read_trajectory(out, "calcium", replica=r)
+        ref_steps, ref_calcium = probes.read_trajectory(ref, "calcium")
+        np.testing.assert_array_equal(steps, ref_steps)
+        np.testing.assert_array_equal(calcium, ref_calcium)
+        np.testing.assert_array_equal(steps, np.arange(1, 121))
+    # unbatched read of a replica-only directory: no files, loud error
+    with pytest.raises(FileNotFoundError):
+        probes.read_trajectory(out, "calcium")
+    # empty batched chunk flushes nothing
+    assert probes.ProbeWriter(out).flush(pset, pset.init(eng.n, batch=2)) is None
 
 
 _MULTIDEV_SCRIPT = r'''

@@ -1,0 +1,233 @@
+"""Request-routed pyramid exchange + sharded conflict resolution
+(DESIGN.md §13).
+
+Three layers of coverage:
+
+* host-side statics — `octree.routed_tables` partitions every level's
+  occupied boxes among owners, and `pyramid_exchange_payload`'s work
+  model goes flat per device in weak scaling where the gathered
+  exchange grows O(n);
+* constructor validation — the routed exchange only composes with the
+  sharded FMM owner-span paths, and conflicting knobs fail loudly;
+* the bitwise contract (slow, subprocess, 8 forced host devices) —
+  `pyramid_exchange="routed"` plus `synapses.resolve_conflicts_span`
+  reproduce single-device `simulate` exactly (records, spike streams,
+  committed edge tables) for p in {1, 2, 4, 8}, including swept
+  KernelParams on a 2-D ensemble x data mesh.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import octree
+from repro.core.engine import EngineConfig
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.core.distributed import DistributedPlasticityEngine
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in: lets host-side constructor machinery
+    (spans, tables, payload counters) run at device counts the test host
+    does not have.  Anything touching collectives would fail loudly."""
+
+    def __init__(self, p):
+        self.shape = {"data": p}
+
+
+def _positions(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 1000.0, (n, 3)).astype(np.float32)
+
+
+def _engine(n, p, depth=3, **kw):
+    kw.setdefault("pyramid_exchange", "routed")
+    return DistributedPlasticityEngine(
+        _positions(n), _FakeMesh(p), "data",
+        MSPConfig.calibrated(speedup=100.0), FMMConfig(c1=8, c2=8),
+        EngineConfig(method="fmm", depth=depth), **kw)
+
+
+def test_pyramid_exchange_validation():
+    with pytest.raises(ValueError, match="pyramid_exchange"):
+        _engine(64, 2, pyramid_exchange="sparse")
+    with pytest.raises(ValueError, match="routed"):
+        _engine(64, 2, find_phase="replicated")
+    with pytest.raises(ValueError, match="routed"):
+        _engine(64, 2, pyramid_partials="masked")
+    with pytest.raises(ValueError, match="routed"):
+        DistributedPlasticityEngine(
+            _positions(64), _FakeMesh(2), "data",
+            MSPConfig.calibrated(speedup=100.0), FMMConfig(c1=8, c2=8),
+            EngineConfig(method="barnes_hut", depth=3),
+            pyramid_exchange="routed")
+    with pytest.raises(ValueError, match="exchange"):
+        _engine(64, 2).pyramid_exchange_payload("sparse")
+
+
+def test_routed_tables_partition():
+    """Every occupied box has exactly one owner, owners are nondecreasing,
+    and each rank's occ_ids window covers all of its owned boxes."""
+    eng = _engine(128, 4)
+    tables = eng._tables
+    spans = eng._spans
+    assert tables.num_shards == 4
+    for level in range(eng.structure.depth + 1):
+        occ = eng.structure.occupied_at(level)
+        owner = tables.box_owner[level]
+        # dense map: -1 exactly off the occupied list
+        assert set(np.flatnonzero(owner >= 0)) == set(occ.tolist())
+        occ_owner = owner[occ]
+        assert np.all(np.diff(occ_owner) >= 0)          # nondecreasing
+        assert np.all((occ_owner >= 0) & (occ_owner < 4))
+        for rank in range(4):
+            owned = occ[occ_owner == rank]
+            window = tables.occ_ids[level][rank]
+            assert window.shape == (spans.occ_width[level],)
+            assert set(owned.tolist()) <= set(window.tolist())
+
+
+def test_routed_shared_levels_clamped():
+    assert _engine(128, 2, routed_shared_levels=99).routed_shared_levels == 3
+    assert _engine(128, 2, routed_shared_levels=-1).routed_shared_levels == 0
+    assert _engine(128, 2).routed_shared_levels == 2
+    # gathered engines don't build tables
+    g = _engine(128, 2, pyramid_exchange="gathered")
+    assert g._tables is None
+
+
+def test_payload_model_weak_scaling():
+    """Weak scaling (n = 512 p, auto depth): the gathered per-device payload
+    grows with the pyramid while the routed one stays flat within 1.5x of
+    its p=1 value — the fig_exchange headline invariant, checked at p=16
+    (beyond any forced-device run)."""
+    routed, gathered = {}, {}
+    for p in (1, 2, 4, 8, 16):
+        eng = _engine(512 * p, p, depth=None)
+        routed[p] = eng.pyramid_exchange_payload()["pyramid_payload_elements"]
+        gathered[p] = eng.pyramid_exchange_payload(
+            "gathered")["pyramid_payload_elements"]
+    assert max(routed.values()) <= 1.5 * routed[1]
+    assert gathered[16] >= 8 * gathered[1]
+    assert routed[16] < gathered[16] / 3
+
+
+_PARITY_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.ensemble import EnsembleEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.core.distributed import (DistributedEnsembleEngine,
+                                    DistributedPlasticityEngine)
+from repro.launch import sweep
+
+assert len(jax.devices()) == 8
+rng = np.random.default_rng(0)
+pos = rng.uniform(0, 1000.0, (128, 3)).astype(np.float32)
+msp = MSPConfig.calibrated(speedup=100.0)
+fmm = FMMConfig(c1=4, c2=4, sigma=400.0)
+ecfg = EngineConfig(method="fmm", depth=3)
+steps = 1500
+key = jax.random.key(7)
+
+ref = None
+for p in (1, 2, 4, 8):
+    mesh = Mesh(np.array(jax.devices()[:p]), ("data",))
+    d = DistributedPlasticityEngine(pos, mesh, "data", msp, fmm, ecfg,
+                                    pyramid_exchange="routed")
+    if ref is None:
+        seng = PlasticityEngine(d.positions_np, msp, fmm, ecfg)
+        ref = seng.simulate(seng.init_state(), key, steps)
+    st, recs = d.simulate(d.init_state(), key, steps)
+    for name in recs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(recs, name)),
+            np.asarray(getattr(ref[1], name)), err_msg=f"p={p} {name}")
+    for name in ("src", "dst", "valid"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st.edges, name)),
+            np.asarray(getattr(ref[0].edges, name)),
+            err_msg=f"p={p} edges.{name}")
+    assert int(np.asarray(recs.num_synapses)[-1]) > 0
+    print("P_OK", p)
+
+# swept KernelParams on the 2-D ensemble x data mesh
+configs = [{"sigma": 400.0}, {"sigma": 700.0}]
+keys = jax.random.split(jax.random.key(3), 2)
+eref = None
+for p in (2, 4):
+    mesh = Mesh(np.array(jax.devices()[:2 * p]).reshape(2, p),
+                ("ensemble", "data"))
+    d = DistributedPlasticityEngine(pos, mesh, "data", msp, fmm, ecfg,
+                                    pyramid_exchange="routed")
+    dens = DistributedEnsembleEngine(d)
+    if eref is None:
+        seng = PlasticityEngine(d.positions_np, msp, fmm, ecfg)
+        ens = EnsembleEngine(seng)
+        params = sweep.pack_params(seng, configs)
+        eref = ens.simulate(ens.init_states(2), keys, steps, params)
+    _, recs = dens.simulate(dens.init_states(2), keys, steps, params)
+    for name in recs._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(recs, name)),
+            np.asarray(getattr(eref[1], name)), err_msg=f"2x{p} {name}")
+    assert np.asarray(recs.num_synapses)[-1].min() > 0
+    print("SWEEP_OK", p)
+print("ALL_OK")
+'''
+
+
+@pytest.mark.slow
+def test_routed_exchange_parity_subprocess():
+    """p in {1, 2, 4, 8}: routed-exchange runs bitwise match single-device
+    simulate on records AND committed edge tables, and swept-KernelParams
+    ensembles match on 2-D meshes (the psum_scatter fetch under the
+    replica vmap)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", _PARITY_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]
+    assert "ALL_OK" in res.stdout
+    for p in (1, 2, 4, 8):
+        assert f"P_OK {p}" in res.stdout
+    for p in (2, 4):
+        assert f"SWEEP_OK {p}" in res.stdout
+
+
+def test_conflict_span_matches_replicated():
+    """resolve_conflicts_span == resolve_conflicts exactly, on a 1-device
+    mesh (identity gather): same lexsort keys, same splitter arithmetic."""
+    from functools import partial
+    from repro.core import synapses
+
+    rng = np.random.default_rng(4)
+    n = 64
+    for trial in range(4):
+        partner = np.where(rng.random(n) < 0.3, -1,
+                           rng.integers(0, n, n)).astype(np.int32)
+        req = rng.integers(1, 4, n).astype(np.int32)
+        cap = rng.integers(0, 3, n).astype(np.int32)
+        key = jax.random.key(trial)
+        want = synapses.resolve_conflicts(
+            jax.numpy.asarray(partner), jax.numpy.asarray(req),
+            jax.numpy.asarray(cap), key)
+        got = jax.jit(partial(
+            synapses.resolve_conflicts_span, num_shards=1,
+            gather=lambda x: x))(
+                jax.numpy.asarray(partner), jax.numpy.asarray(req),
+                jax.numpy.asarray(cap), key,
+                rank=jax.numpy.int32(0))
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got),
+                                      err_msg=f"trial {trial}")

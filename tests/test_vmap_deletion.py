@@ -1,0 +1,123 @@
+"""The §10 deletion caveat is closed: under the ensemble vmap the rare
+any-excess deletion stays a genuine `lax.cond` (DESIGN.md §13).
+
+Two halves:
+
+* lowering — the jaxpr of the vmapped sharded connectivity update contains
+  NO O(K*E) edge-table all_gather outside a cond branch (the former
+  caveat: a per-replica predicate lowered the cond to a `select` that ran
+  the gather unconditionally on 2-D sweep meshes), while the gather is
+  still present INSIDE the branch for the genuine-excess case;
+* values — a forced-deletion step under a K=2 ensemble on a 2-D sweep
+  mesh stays bitwise equal to independent single-device runs.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.core.distributed import (DistributedEnsembleEngine,
+                                    DistributedPlasticityEngine)
+from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
+
+N = 96
+K = 2
+
+
+def _dist_engine():
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 1000.0, (N, 3)).astype(np.float32)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("ensemble", "data"))
+    return DistributedPlasticityEngine(
+        pos, mesh, "data", MSPConfig.calibrated(speedup=400.0),
+        FMMConfig(c1=8, c2=8), EngineConfig(method="fmm"))
+
+
+def _iter_gathers(jaxpr, in_cond=False):
+    """Yield (eqn, in_cond_branch) for every all_gather, recursing through
+    every sub-jaxpr a primitive carries (cond branches, scan/closed-call
+    bodies, custom_* internals)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "all_gather":
+            yield eqn, in_cond
+        inside = in_cond or eqn.primitive.name == "cond"
+        for param in eqn.params.values():
+            for sub in (param if isinstance(param, (tuple, list))
+                        else (param,)):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield from _iter_gathers(inner, inside)
+                elif hasattr(sub, "eqns"):
+                    yield from _iter_gathers(sub, inside)
+
+
+def test_vmapped_update_keeps_deletion_gather_conditional():
+    eng = _dist_engine()
+    states = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (K,) + x.shape), eng.init_state())
+    keys = jax.random.split(jax.random.key(0), K)
+
+    def batched_update(st, ks):
+        return jax.vmap(
+            lambda s, k: eng._conn_update_sharded(s, kconn=k, params=None)
+        )(st, ks)
+
+    state_spec, _ = eng._specs()
+    bspec = jax.tree.map(lambda s: P(None, *s), state_spec)
+    sharded = shard_map(batched_update, mesh=eng.mesh,
+                        in_specs=(bspec, P()), out_specs=bspec,
+                        **SHARD_MAP_NO_CHECK)
+    jaxpr = jax.make_jaxpr(sharded)(states, keys)
+
+    threshold = K * eng.edge_capacity  # the batched edge-table gather
+    big = [(eqn, in_cond) for eqn, in_cond in _iter_gathers(jaxpr.jaxpr)
+           if int(np.prod(eqn.outvars[0].aval.shape)) >= threshold]
+    assert big, "no edge-table-sized all_gather found at all"
+    unconditional = [eqn for eqn, in_cond in big if not in_cond]
+    assert not unconditional, (
+        f"O(K*E) edge-table gather lowered OUTSIDE the deletion cond: "
+        f"{unconditional}")
+    assert any(in_cond for _, in_cond in big), (
+        "deletion-path gather missing from the cond branch")
+
+
+def test_forced_deletion_bitwise_under_2d_ensemble():
+    """Grow a network, zero every synaptic element and pin calcium above
+    eps, then step through the next update on the 2-D mesh: the massacre
+    step's synapse counts (and all records) stay bitwise equal to
+    independent single-device runs."""
+    eng = _dist_engine()
+    dens = DistributedEnsembleEngine(eng)
+    seng = PlasticityEngine(
+        eng.positions_np, MSPConfig.calibrated(speedup=400.0),
+        FMMConfig(c1=8, c2=8), EngineConfig(method="fmm"))
+
+    key = jax.random.key(4)
+    grown, recs = seng.simulate(seng.init_state(), key, 600)
+    assert int(np.asarray(recs.num_synapses)[-1]) > 50
+
+    neurons = grown.neurons._replace(
+        ax_elems=jnp.zeros_like(grown.neurons.ax_elems),
+        den_elems=jnp.zeros_like(grown.neurons.den_elems),
+        calcium=jnp.full_like(grown.neurons.calcium, 2.0))
+    doctored = grown._replace(neurons=neurons)
+
+    steps = seng.msp_cfg.update_interval + 5
+    keys = jax.random.split(jax.random.key(9), K)
+    batched = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (K,) + x.shape), doctored)
+    _, recs_d = dens.simulate(batched, keys, steps)
+
+    syn_d = np.asarray(recs_d.num_synapses)          # (steps, K)
+    assert syn_d.min() == 0, "forced deletion never fired"
+    for r in range(K):
+        _, ref = seng.simulate(doctored, keys[r], steps)
+        for name in ref._fields:
+            np.testing.assert_array_equal(
+                syn_d[:, r] if name == "num_synapses"
+                else np.asarray(getattr(recs_d, name))[:, r],
+                np.asarray(getattr(ref, name)), err_msg=f"r={r} {name}")

@@ -18,6 +18,14 @@ where bigger is better, not times.  Only metrics present in BOTH files are
 compared (figures come and go across PRs), and baselines below
 ``--min-baseline-s`` are skipped as noise-dominated.
 
+Counter metrics — keys ending ``_elements`` or ``_payload`` (collective
+payload sizes, gathered element counts: deterministic work-model numbers,
+not timings) — are gated alongside the wall times but with NO noise floor
+and the tighter ``--counter-fail-ratio`` (default 1.01x): counters are
+exact functions of the code, so any growth at matched sizes is a real
+regression (e.g. a sharded exchange silently falling back to a replicated
+gather), not timer noise.
+
 ``--exclude-pr`` matters: ``run.py --pr N`` writes ``BENCH_N.json`` BEFORE
 this check runs, so without it the freshest baseline would be the run under
 test and the gate would vacuously pass by comparing it to itself.
@@ -53,6 +61,21 @@ def time_metrics(node, path=""):
                 yield from time_metrics(val, sub)
 
 
+def counter_metrics(node, path=""):
+    """Yield (dotted_path, value) for every counter metric in a result
+    tree: keys ending `_elements` or `_payload` (exact work-model counts,
+    gated without a noise floor)."""
+    if isinstance(node, dict):
+        for key, val in node.items():
+            sub = f"{path}.{key}" if path else str(key)
+            if (isinstance(val, (int, float)) and not isinstance(val, bool)
+                    and (key.endswith("_elements")
+                         or key.endswith("_payload"))):
+                yield sub, float(val)
+            else:
+                yield from counter_metrics(val, sub)
+
+
 def latest_baseline(trajectory_dir: Path, exclude_pr: str | None):
     """Highest-numbered BENCH_<n>.json, skipping the run under test."""
     best = None
@@ -82,6 +105,10 @@ def main(argv=None) -> int:
     ap.add_argument("--min-baseline-s", type=float, default=0.05,
                     help="skip metrics whose baseline is below this "
                          "(noise-dominated sub-50ms timings)")
+    ap.add_argument("--counter-fail-ratio", type=float, default=1.01,
+                    help="fail threshold for *_elements/*_payload counter "
+                         "metrics (exact counts: no noise floor, no warn "
+                         "band)")
     args = ap.parse_args(argv)
 
     results_path = Path(args.results)
@@ -116,17 +143,36 @@ def main(argv=None) -> int:
         elif ratio > args.warn_ratio:
             warnings.append(line)
 
+    fresh_counters = dict(counter_metrics(fresh))
+    base_counters = dict(counter_metrics(baseline))
+    shared_counters = sorted(set(fresh_counters) & set(base_counters))
+    counter_failures = []
+    for key in shared_counters:
+        base = base_counters[key]
+        now = fresh_counters[key]
+        if base == 0:
+            if now > 0:
+                counter_failures.append(f"{key}: {base:.0f} -> {now:.0f}")
+            continue
+        ratio = now / base
+        if ratio > args.counter_fail_ratio:
+            counter_failures.append(
+                f"{key}: {base:.0f} -> {now:.0f} ({ratio:.3f}x)")
+
     print(f"trajectory gate: baseline {baseline_path.name}, "
           f"{len(shared)} shared time metrics, {compared} above the "
-          f"{args.min_baseline_s}s noise floor.")
+          f"{args.min_baseline_s}s noise floor, "
+          f"{len(shared_counters)} shared counter metrics.")
     for line in warnings:
         print(f"  WARN  (> {args.warn_ratio}x): {line}")
     for line in failures:
         print(f"  FAIL  (> {args.fail_ratio}x): {line}", file=sys.stderr)
-    if failures:
-        print(f"FAIL: {len(failures)} metric(s) regressed more than "
-              f"{args.fail_ratio}x vs {baseline_path.name}",
+    for line in counter_failures:
+        print(f"  FAIL  (counter > {args.counter_fail_ratio}x): {line}",
               file=sys.stderr)
+    if failures or counter_failures:
+        print(f"FAIL: {len(failures) + len(counter_failures)} metric(s) "
+              f"regressed vs {baseline_path.name}", file=sys.stderr)
         return 1
     print("trajectory gate: ok.")
     return 0
