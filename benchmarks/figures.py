@@ -937,3 +937,151 @@ def fig_probes(n=400, steps=1200, chunk_sizes=(64, 256), reps=2) -> Dict:
         entry["overhead_x"] = entry["probed_s"] / base
         out["chunks"][str(chunk)] = entry
     return out
+
+
+
+def fig_serve(pool=128, num_slots=4, num_sessions=12, round_steps=100,
+              max_rounds_of_work=4, traffic_seed=6, speedup=400.0,
+              canaries=3) -> Dict:
+    """Serving throughput: continuous batching on vs off, same service.
+
+    Replays the integration harness's standard traffic (launch/serve.py:
+    staggered arrivals, heterogeneous sizes, idle gaps forcing
+    evict/restore) through a K-slot `SimulationService`, timing every
+    executed round, then replays the SAME traffic through a 1-slot
+    service — sequential serving, the no-batching baseline: identical
+    round program shape, identical padded-slot contract, the only
+    difference is that sessions queue instead of sharing the batch.
+    Compile is excluded both ways by swapping the first executed round's
+    wall for the median of the later ones (ONE compiled program serves
+    every occupancy either way).
+
+    Headline: sessions/sec batched vs sequential — continuous batching
+    wins because a K-occupancy round advances K sessions for much less
+    than K 1-occupancy rounds (the vmapped slot axis vectorises, and the
+    per-round host work — admission, harvest, dispatch — is paid once
+    per round, not once per session).  `full_batch_over_sequential`
+    gates the claim at full occupancy: session-steps/sec of occupancy-K
+    rounds over the sequential service's steps/sec, < 1 becomes an
+    "error" key (nonzero bench exit).  Per-occupancy p99 round latency
+    shows what an admission costs its batch-mates.
+
+    An isolated `PlasticityEngine.simulate` per session rides along as
+    the bitwise canary (`canaries` sessions, smallest/largest first —
+    served records must equal the isolated engine's exactly, DESIGN.md
+    §14) and as `isolated_steps_per_s` — bespoke unpadded per-session
+    programs, the padding-tax reference, not a serving mode."""
+    import dataclasses
+    import tempfile
+    import jax
+    from repro.launch.serve import build_service, default_traffic
+    from repro.serve import session as sess_mod
+
+    traffic = default_traffic(seed=traffic_seed, num_sessions=num_sessions,
+                              pool_size=pool, round_steps=round_steps,
+                              max_rounds_of_work=max_rounds_of_work)
+    # probes are a pure observer with their own figure (fig_probes);
+    # strip the generator's probe requests so both serving modes run the
+    # bare step program
+    traffic = [(arr, dataclasses.replace(req, record_probes=False))
+               for arr, req in traffic]
+
+    def timed_replay(slots, ckpt):
+        """Replay `traffic` to completion; wall per executed round."""
+        svc = build_service(pool, num_slots=slots, round_steps=round_steps,
+                            speedup=speedup, seed=42, checkpoint_dir=ckpt)
+        pending = sorted(traffic, key=lambda t: t[0])
+        walls, occs, events = [], [], []
+        i = 0
+        while True:
+            while i < len(pending) and pending[i][0] <= svc.round_idx:
+                svc.submit(pending[i][1])
+                i += 1
+            executed = len(svc.occupancy_log)
+            t0 = time.perf_counter()
+            events.extend(svc.run_round())
+            dt = time.perf_counter() - t0
+            if len(svc.occupancy_log) > executed:     # device work happened
+                walls.append(dt)
+                occs.append(svc.occupancy_log[-1])
+            if i == len(pending) and all(
+                    s.status == sess_mod.FINISHED
+                    for s in svc.sessions.values()):
+                return svc, walls, occs, events
+
+    def compile_excluded(walls):
+        steady = sorted(walls[1:]) or walls
+        return sum([steady[len(steady) // 2]] + walls[1:])
+
+    with tempfile.TemporaryDirectory(prefix="fig_serve_") as ckpt:
+        svc, walls, occs, events = timed_replay(num_slots, ckpt)
+        batched_s = compile_excluded(walls)
+        svc_seq, walls_seq, _, _ = timed_replay(1, ckpt + "_seq")
+        sequential_s = compile_excluded(walls_seq)
+        svc_seq.close()
+
+        # -- isolated references: bitwise canaries + padding-tax rate ------
+        reqs = sorted((req for _, req in traffic), key=lambda r: r.n_neurons)
+        canary_ids = {r.session_id
+                      for r in reqs[:-(canaries + 1):-1] + reqs[:canaries]}
+        isolated_s, total_steps = 0.0, 0
+        out: Dict = {"pool": pool, "num_slots": num_slots,
+                     "num_sessions": len(reqs), "round_steps": round_steps,
+                     "rounds_executed": len(walls),
+                     "rounds_executed_sequential": len(walls_seq)}
+        for req in reqs:
+            eng = svc.isolated_engine(req.n_neurons)
+            key = jax.random.key(req.seed)
+            _, recs = eng.simulate(eng.init_state(), key, req.num_steps)
+            jax.block_until_ready(recs.calcium_mean)      # compile pass
+            t0 = time.perf_counter()
+            _, recs = eng.simulate(eng.init_state(), key, req.num_steps)
+            jax.block_until_ready(recs.calcium_mean)
+            isolated_s += time.perf_counter() - t0
+            total_steps += req.num_steps
+            if req.session_id in canary_ids:
+                served = svc.result(req.session_id).records
+                for f in recs._fields:
+                    a = np.asarray(getattr(served, f))
+                    b = np.asarray(getattr(recs, f))
+                    if a.shape != b.shape or not np.array_equal(
+                            a.view(np.uint8), b.view(np.uint8)):
+                        out["error"] = (f"bitwise canary failed: "
+                                        f"{req.session_id} records.{f}")
+
+        # -- derived -------------------------------------------------------
+        full = [(o, w) for o, w in zip(occs[1:], walls[1:]) if o >= num_slots]
+        if not full:
+            out.setdefault(
+                "error", f"traffic never filled the batch (max occupancy "
+                         f"{max(occs)} of {num_slots}) — no full-batch "
+                         f"throughput point")
+        full_rate = (sorted(o * round_steps / w for o, w in full)
+                     [len(full) // 2] if full else 0.0)
+        seq_rate = len(walls_seq[1:]) * round_steps / sum(walls_seq[1:])
+        lat: Dict = {}
+        for o, w in zip(occs[1:], walls[1:]):
+            lat.setdefault(o, []).append(w / round_steps)
+        out.update({
+            "batched_s": batched_s, "sequential_s": sequential_s,
+            "isolated_s": isolated_s,
+            "batched_sessions_per_s": len(reqs) / batched_s,
+            "sequential_sessions_per_s": len(reqs) / sequential_s,
+            "full_batch_steps_per_s": full_rate,
+            "sequential_steps_per_s": seq_rate,
+            "isolated_steps_per_s": total_steps / isolated_s,
+            "occupancy_hist": {str(o): occs.count(o)
+                               for o in sorted(set(occs))},
+            "p99_round_latency_per_step_s": {
+                str(o): sorted(v)[max(0, int(len(v) * 0.99) - 1)]
+                for o, v in sorted(lat.items())},
+            "full_batch_over_sequential": full_rate / seq_rate,
+            "evictions": sum("evicted" in e for e in events),
+            "restores": sum("restored" in e for e in events),
+        })
+        if full and full_rate < seq_rate:
+            out.setdefault(
+                "error", f"full-occupancy throughput below sequential: "
+                         f"{full_rate:.1f} < {seq_rate:.1f} steps/s")
+        svc.close()
+        return out

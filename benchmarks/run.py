@@ -44,6 +44,8 @@ QUICK = {
     "fig_kernels": dict(gauss_sizes=((256, 1024),), m2l_sizes=(2048,),
                         msp_sizes=(65536,), reps=2),
     "fig_probes": dict(n=160, steps=400, chunk_sizes=(50, 200), reps=1),
+    "fig_serve": dict(pool=64, num_sessions=8, round_steps=100,
+                      max_rounds_of_work=3, traffic_seed=6, canaries=2),
 }
 
 
@@ -151,6 +153,12 @@ def main() -> None:
                 + "/".join(f"{v['overhead_x']:.2f}"
                            for v in r["chunks"].values())
                 + f";probe_free_s={r['probe_free_s']:.2f}"]))
+    run("fig_serve", figures.fig_serve,
+        lambda r: (f"error={str(r['error'])[:60]}" if "error" in r else
+                   f"batched_sps={r['batched_sessions_per_s']:.3f};"
+                   f"seq_sps={r['sequential_sessions_per_s']:.3f};"
+                   f"full_batch_x={r['full_batch_over_sequential']:.2f};"
+                   f"evictions={r['evictions']}"))
 
     with open("bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)

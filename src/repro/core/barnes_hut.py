@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import expansions as ex
+from repro.core import streams
 from repro.core.octree import LevelData, OctreeStructure
 from repro.core.traversal import FMMConfig, NEG_INF, resolve_leaf_partners
 
@@ -31,7 +32,8 @@ from repro.core.traversal import FMMConfig, NEG_INF, resolve_leaf_partners
 def descend_barnes_hut(structure: OctreeStructure, levels: List[LevelData],
                        positions: jnp.ndarray, key: jax.Array,
                        cfg: FMMConfig, *,
-                       row_start=None, row_count: int = 0) -> jnp.ndarray:
+                       row_start=None, row_count: int = 0,
+                       rng: str = "batched") -> jnp.ndarray:
     """Per-neuron stochastic descent.  Returns (n,) target leaf box ids.
 
     row_start/row_count: optional contiguous neuron-row slice — the
@@ -52,6 +54,8 @@ def descend_barnes_hut(structure: OctreeStructure, levels: List[LevelData],
         slg = lambda g: jax.lax.dynamic_slice(
             g, (row_start, jnp.int32(0)), (m, 8))
     pos = sl_rows(positions)
+    rows = jnp.arange(n, dtype=jnp.int32) if row_start is None \
+        else row_start + jnp.arange(m, dtype=jnp.int32)
     box = jnp.zeros((m,), jnp.int32)            # every neuron starts at root
     for l in range(structure.depth):
         nxt = levels[l + 1]
@@ -61,8 +65,12 @@ def descend_barnes_hut(structure: OctreeStructure, levels: List[LevelData],
         d2 = jnp.sum((pos[:, None, :] - den_c) ** 2, axis=-1)
         logw = jnp.log(jnp.maximum(den_w, ex.LOG_EPS)) - d2 / delta
         logw = jnp.where(den_w > 0, logw, NEG_INF)
-        g = slg(jax.random.gumbel(jax.random.fold_in(key, l + 1), (n, 8),
-                                  logw.dtype))
+        kl = jax.random.fold_in(key, l + 1)
+        # Counter mode keys each cell by (neuron row, child) so the draw is
+        # invariant to the row count (padded pools, DESIGN.md §14).
+        g = streams.gumbel_grid(kl, rows, jnp.arange(8, dtype=jnp.int32),
+                                logw.dtype) if rng == "counter" \
+            else slg(jax.random.gumbel(kl, (n, 8), logw.dtype))
         pick = jnp.argmax(logw + g, axis=-1).astype(jnp.int32)
         box = (box << 3) + pick
     return box
@@ -72,7 +80,8 @@ def find_partners_bh(structure: OctreeStructure, levels: List[LevelData],
                      positions: jnp.ndarray, ax_vac: jnp.ndarray,
                      den_vac: jnp.ndarray, key: jax.Array,
                      cfg: FMMConfig, *,
-                     row_start=None, row_count: int = 0) -> jnp.ndarray:
+                     row_start=None, row_count: int = 0,
+                     rng: str = "batched") -> jnp.ndarray:
     """Barnes–Hut partner choice: per-neuron descent + exact leaf resolve.
 
     With row_start/row_count, computes only the owned neuron rows — bitwise
@@ -81,18 +90,20 @@ def find_partners_bh(structure: OctreeStructure, levels: List[LevelData],
     per-level psum — DESIGN.md §10)."""
     k1, k2 = jax.random.split(key)
     tgt = descend_barnes_hut(structure, levels, positions, k1, cfg,
-                             row_start=row_start, row_count=row_count)
+                             row_start=row_start, row_count=row_count,
+                             rng=rng)
     has_any_den = levels[0].den_w[0] > 0
     ax_rows = ax_vac if row_start is None else \
         jax.lax.dynamic_slice_in_dim(ax_vac, row_start, row_count)
     my_tgt = jnp.where((ax_rows >= 1.0) & has_any_den, tgt, -1)
     return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
-                                 my_tgt, k2, cfg, row_start=row_start)
+                                 my_tgt, k2, cfg, row_start=row_start,
+                                 rng=rng)
 
 
 def find_partners_direct(positions: jnp.ndarray, ax_vac: jnp.ndarray,
                          den_vac: jnp.ndarray, key: jax.Array,
-                         cfg: FMMConfig) -> jnp.ndarray:
+                         cfg: FMMConfig, rng: str = "batched") -> jnp.ndarray:
     """O(n^2) exact partner choice — the MSP's original formulation (Eq. 1)
     and the ground-truth distribution both approximations are tested against."""
     n = positions.shape[0]
@@ -102,7 +113,9 @@ def find_partners_direct(positions: jnp.ndarray, ax_vac: jnp.ndarray,
     eye = jnp.eye(n, dtype=bool)
     mask = (den_vac[None, :] > 0) & ~eye
     logw = jnp.where(mask, logw, NEG_INF)
-    g = jax.random.gumbel(key, logw.shape, logw.dtype)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    g = streams.gumbel_grid(key, idx, idx, logw.dtype) if rng == "counter" \
+        else jax.random.gumbel(key, logw.shape, logw.dtype)
     partner = jnp.argmax(logw + g, axis=-1).astype(jnp.int32)
     ok = (ax_vac >= 1.0) & jnp.any(mask, axis=-1)
     return jnp.where(ok, partner, -1)

@@ -74,7 +74,7 @@ from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
 from repro.core import barnes_hut, msp, octree, synapses, traversal
 from repro.core import multi_index as mi
 from repro.core.engine import (EngineConfig, KernelParams, PlasticityEngine,
-                               SimState, StepRecord)
+                               SimState, StepRecord, _pin_f32)
 from repro.core.ensemble import scan_replicas
 from repro.core.msp import MSPConfig
 from repro.core.traversal import FMMConfig
@@ -654,14 +654,28 @@ class DistributedPlasticityEngine(PlasticityEngine):
         state = jax.lax.cond(do_update, conn_update, lambda s: s, state)
 
         # Observables: gather the global vectors and reduce them exactly as
-        # the single-device engine does (integer psum for the synapse count).
+        # the single-device engine does — the same order-deterministic
+        # accumulation (synapses.det_sum) over the same (n,) vectors, so the
+        # cross-engine bitwise record contract survives the padded-parity
+        # record change (DESIGN.md §14); integer psum for the synapse count.
         ca_g = jax.lax.all_gather(neurons.calcium, axis, tiled=True)
         spk_g = jax.lax.all_gather(neurons.spiked, axis, tiled=True)
         nsyn = jax.lax.psum(jnp.sum(state.edges.valid.astype(jnp.int32)), axis)
+        inv = 1.0 / jnp.asarray(n, jnp.float32)   # reciprocal-multiply, like
+        # All-true select on a traced predicate, exactly as in engine.step:
+        # blocks the FMA contraction of the dev2 square into det_sum's first
+        # add, which XLA applies only in select-free fusions (1-ulp
+        # calcium_std skew otherwise, DESIGN.md §11, §14).
+        guard = jnp.arange(n, dtype=jnp.int32) >= jnp.minimum(state.step, 0)
+        ca_m = jnp.where(guard, ca_g, 0.0)
+        ca_mean = synapses.det_sum(ca_m) * inv    # engine.step (1-ulp rule)
+        mean_g = _pin_f32(ca_mean, state.step)    # block FMA into the sub
+        dev2 = jnp.where(guard, (ca_g - mean_g) ** 2, 0.0)
         rec = StepRecord(
-            calcium_mean=jnp.mean(ca_g), calcium_std=jnp.std(ca_g),
+            calcium_mean=ca_mean,
+            calcium_std=jnp.sqrt(synapses.det_sum(dev2) * inv),
             num_synapses=nsyn,
-            spike_rate=jnp.mean(spk_g.astype(jnp.float32)))
+            spike_rate=synapses.det_sum(spk_g.astype(jnp.float32)) * inv)
         return state, rec
 
     def make_sharded_step(self):

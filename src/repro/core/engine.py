@@ -71,6 +71,22 @@ class KernelParams(NamedTuple):
                    inhibitory_fraction=f32(engine_cfg.inhibitory_fraction))
 
 
+def _pin_f32(x, step):
+    """Bitwise identity that blocks float rewrites across it.
+
+    Round-trips `x` through the integer domain with an add of
+    `min(step, 0)` — exactly zero for the engine's non-negative step
+    counter, but traced, so neither XLA nor LLVM can fold the round-trip
+    away.  Used where a multiply's rounded value must be pinned before it
+    feeds a sub/add: a guard select is not enough (LLVM distributes the
+    sub over `select(p, mul, 0)` and FMA-contracts inside the arm), but no
+    float contraction can cross an integer add (DESIGN.md §14).
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    return jax.lax.bitcast_convert_type(bits + jnp.minimum(step, 0),
+                                        jnp.float32)
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     method: str = "fmm"                 # fmm | barnes_hut | direct
@@ -91,6 +107,13 @@ class EngineConfig:
     # Pallas on TPU, reference elsewhere.  Composes with `method`: the fused
     # neuron update routes on every method, the M2L kernel on method="fmm".
     backend: str = "reference"
+    # RNG stream layout (DESIGN.md §14): "batched" = one vectorised draw per
+    # array (the default; stream depends on the array SHAPE), "counter" =
+    # every random value keyed by its logical index (core/streams.py), so
+    # draws are invariant to the row/slot count.  Counter mode is what lets
+    # a padded-subdomain run (serve layer) reproduce an unpadded run
+    # bitwise; it costs one fold_in per element, so it stays opt-in.
+    rng: str = "batched"
 
     def __post_init__(self):
         # Fail at construction: an unknown method used to surface only deep
@@ -107,6 +130,9 @@ class EngineConfig:
             raise ValueError(
                 f"backend must be one of 'reference'/'pallas'/'auto', "
                 f"got {self.backend!r}")
+        if self.rng not in ("batched", "counter"):
+            raise ValueError(
+                f"rng must be 'batched' or 'counter', got {self.rng!r}")
 
 
 class PlasticityEngine:
@@ -155,28 +181,44 @@ class PlasticityEngine:
             guard_delta=guard if guard is not None
             else float(self.fmm_cfg.delta))
 
-    def _runtime_sign(self, params: Optional[KernelParams]):
+    def _runtime_sign(self, params: Optional[KernelParams],
+                      n_active: Optional[jax.Array] = None):
         """(n,) +1/-1 synapse sign vector from a traced inhibitory fraction
-        (None = the static config's precomputed vector)."""
+        (None = the static config's precomputed vector).
+
+        n_active: optional traced active-row count (padded subdomains,
+        DESIGN.md §14) — the inhibitory count is floor(f * n_active), so an
+        n_active session in a padded pool gets the sign prefix an isolated
+        n_active engine would compute (pad rows get +1; their contributions
+        are exact zeros anyway)."""
         if params is None:
-            return self.sign
+            if n_active is None or self.sign is None:
+                return self.sign
+            frac = jnp.asarray(self.engine_cfg.inhibitory_fraction,
+                               jnp.float32)
+        else:
+            frac = params.inhibitory_fraction
         # floor, like the static constructor's int(f * n) — idx < f*n alone
         # would make ceil(f*n) neurons inhibitory when f*n is not exactly
         # representable (0.3 * 200 = 60.000004 in float32).
+        count = jnp.asarray(self.n, jnp.float32) if n_active is None \
+            else n_active.astype(jnp.float32)
         idx = jnp.arange(self.n, dtype=jnp.float32)
-        n_inh = jnp.floor(params.inhibitory_fraction * self.n)
+        n_inh = jnp.floor(frac * count)
         return jnp.where(idx < n_inh, -1.0, 1.0).astype(jnp.float32)
 
     # -- phase 3: connectivity update --------------------------------------
     def connectivity_update(self, state: SimState, key: jax.Array,
-                            params: Optional[KernelParams] = None) -> SimState:
+                            params: Optional[KernelParams] = None,
+                            n_active: Optional[jax.Array] = None) -> SimState:
         n = self.n
+        rng = self.engine_cfg.rng
         fmm_cfg = self._runtime_fmm_cfg(params)
         kdel, kfind, kconf = jax.random.split(key, 3)
         neurons, edges = state.neurons, state.edges
 
         edges = synapses.delete_excess(edges, neurons.ax_elems,
-                                       neurons.den_elems, kdel)
+                                       neurons.den_elems, kdel, rng=rng)
         out_deg = synapses.out_degree(edges, n)
         in_deg = synapses.in_degree(edges, n)
         ax_vac = jnp.maximum(
@@ -189,7 +231,7 @@ class PlasticityEngine:
         method = self.engine_cfg.method
         if method == "direct":
             partner = barnes_hut.find_partners_direct(
-                self.positions, ax_vac, den_vac, kfind, fmm_cfg)
+                self.positions, ax_vac, den_vac, kfind, fmm_cfg, rng=rng)
         else:
             build = octree.build_pyramid_m2m \
                 if self.engine_cfg.pyramid == "m2m" else octree.build_pyramid
@@ -199,11 +241,11 @@ class PlasticityEngine:
             if method == "fmm":
                 partner = traversal.find_partners(
                     self.structure, levels, self.positions, ax_vac, den_vac,
-                    kfind, fmm_cfg, backend=self.engine_cfg.backend)
+                    kfind, fmm_cfg, backend=self.engine_cfg.backend, rng=rng)
             elif method == "barnes_hut":
                 partner = barnes_hut.find_partners_bh(
                     self.structure, levels, self.positions, ax_vac, den_vac,
-                    kfind, fmm_cfg)
+                    kfind, fmm_cfg, rng=rng)
             else:
                 raise ValueError(f"unknown method {method!r}")
 
@@ -211,15 +253,22 @@ class PlasticityEngine:
                               self.engine_cfg.max_requests_per_neuron)
         req_cnt = jnp.where(partner >= 0, req_cnt, 0)
         accepted = synapses.resolve_conflicts(partner, req_cnt,
-                                              den_vac.astype(jnp.int32), kconf)
+                                              den_vac.astype(jnp.int32), kconf,
+                                              rng=rng)
+        # Padded subdomains restrict inserts to the active slot budget so
+        # slot placement matches the unpadded table (DESIGN.md §14).
+        cap = None if n_active is None else \
+            n_active * self.engine_cfg.edge_capacity_per_neuron
         edges, dropped = synapses.insert(
-            edges, partner, accepted, self.engine_cfg.max_requests_per_neuron)
+            edges, partner, accepted, self.engine_cfg.max_requests_per_neuron,
+            capacity=cap)
         return state._replace(edges=edges, dropped=state.dropped + dropped)
 
     # -- one fused simulation step -----------------------------------------
     def step(self, state: SimState, key: jax.Array,
              params: Optional[KernelParams] = None,
-             do_update: Optional[jax.Array] = None
+             do_update: Optional[jax.Array] = None,
+             n_active: Optional[jax.Array] = None
              ) -> Tuple[SimState, StepRecord]:
         """One activity step (+ the periodic connectivity update).
 
@@ -229,33 +278,79 @@ class PlasticityEngine:
                    so that under `vmap` the update stays a `lax.cond` (a
                    batched predicate would lower to a select that runs the
                    expensive connectivity branch every step for every replica).
+        n_active:  optional traced scalar — only the first n_active neuron
+                   rows are live; rows beyond are pad rows held at exact
+                   zeros (padded subdomains, DESIGN.md §14).  Requires
+                   `EngineConfig.rng = "counter"` for the bitwise contract
+                   (the batched streams are shape-dependent).  Records
+                   reduce over the active rows only.
         """
         kact, kconn = jax.random.split(key)
-        syn_in = synapses.synaptic_input(state.edges, state.neurons.spiked,
-                                         self._runtime_sign(params))
+        mask = None if n_active is None else \
+            jnp.arange(self.n, dtype=jnp.int32) < n_active
+        syn_in = synapses.synaptic_input(
+            state.edges, state.neurons.spiked,
+            self._runtime_sign(params, n_active))
         neurons = msp.step_neurons(state.neurons, syn_in, kact, self.msp_cfg,
-                                   backend=self.engine_cfg.backend)
+                                   backend=self.engine_cfg.backend,
+                                   mask=mask, rng=self.engine_cfg.rng)
         state = state._replace(neurons=neurons, step=state.step + 1)
 
         if do_update is None:
             do_update = (state.step % self.msp_cfg.update_interval) == 0
         state = jax.lax.cond(
             do_update,
-            lambda s: self.connectivity_update(s, kconn, params),
+            lambda s: self.connectivity_update(s, kconn, params, n_active),
             lambda s: s,
             state)
+        # Order-deterministic reductions (synapses.det_sum): pad rows are
+        # exact zeros, and a sequential accumulation over [active | zeros] is
+        # bitwise the accumulation over the active prefix — `jnp.mean` would
+        # let XLA re-associate by LENGTH and break padded parity
+        # (DESIGN.md §14).  Integer sums are order-exact as-is.
+        cnt = jnp.asarray(self.n, jnp.float32) if n_active is None \
+            else n_active.astype(jnp.float32)
+        # Explicit reciprocal-multiply, NOT division: XLA strength-reduces
+        # division by a compile-time constant (the unpadded engine's n) but
+        # not by a traced scalar (the padded path's n_active), for a 1-ulp
+        # skew.  1/cnt is correctly rounded whether folded or computed, so
+        # sum * (1/cnt) is bitwise identical across the two paths.
+        inv = 1.0 / cnt
+        # `guard` is the active mask, or — unpadded — an all-true mask whose
+        # predicate depends on the traced step counter, so XLA cannot fold
+        # the select away.  The select between the square and det_sum's
+        # first add is what keeps the two programs bitwise aligned: without
+        # it LLVM contracts `d*d + partner` into an FMA in the unpadded
+        # fusion only (the padded one has the mask select in between),
+        # skewing calcium_std by 1 ulp (DESIGN.md §11, §14).
+        guard = mask if mask is not None else \
+            jnp.arange(self.n, dtype=jnp.int32) >= jnp.minimum(state.step, 0)
+        ca = jnp.where(guard, neurons.calcium, 0.0)
+        ca_mean = synapses.det_sum(ca) * inv
+        # Pin the mean's bits before the subtract: `calcium - det_sum*inv`
+        # is an fsub-of-fmul that LLVM contracts to an FMA in some fusion
+        # contexts (vmapped slots) but not others.  A guard select is NOT
+        # enough — LLVM distributes the sub over select(p, mul, 0) and
+        # contracts inside the arm — so the value is round-tripped through
+        # an integer add of a traced zero instead: no float rewrite can
+        # cross the int domain, and `+ min(step, 0)` (= 0, step never
+        # negative) cannot be folded because step is traced.
+        mean_g = _pin_f32(ca_mean, state.step)
+        dev2 = jnp.where(guard, (neurons.calcium - mean_g) ** 2, 0.0)
         rec = StepRecord(
-            calcium_mean=jnp.mean(neurons.calcium),
-            calcium_std=jnp.std(neurons.calcium),
+            calcium_mean=ca_mean,
+            calcium_std=jnp.sqrt(synapses.det_sum(dev2) * inv),
             num_synapses=jnp.sum(state.edges.valid.astype(jnp.int32)),
-            spike_rate=jnp.mean(neurons.spiked.astype(jnp.float32)))
+            spike_rate=synapses.det_sum(
+                neurons.spiked.astype(jnp.float32)) * inv)
         return state, rec
 
     # -- whole-simulation scan ----------------------------------------------
     @functools.partial(jax.jit, static_argnums=(0, 3, 5))
     def simulate(self, state: SimState, key: jax.Array, num_steps: int,
                  params: Optional[KernelParams] = None,
-                 probes=None, probe_state=None):
+                 probes=None, probe_state=None,
+                 n_active: Optional[jax.Array] = None):
         """Scan `num_steps` steps; optionally record probes along the way.
 
         probes/probe_state: a static core/probes.ProbeSet plus its
@@ -265,6 +360,7 @@ class PlasticityEngine:
         (DESIGN.md §12) — so the return stays the 2-tuple (state, recs)
         when probes is None and gains the probe state as a third element
         otherwise.
+        n_active: optional traced active-row count (see `step`).
         """
         if probes is not None and probe_state is None:
             probe_state = probes.init(self.n, start_step=state.step)
@@ -275,7 +371,8 @@ class PlasticityEngine:
             # Fold by the CARRIED global step, not the local scan index:
             # identical for a fresh run (step == i), but a chunked/resumed
             # continuation draws fresh streams instead of replaying chunk 0's.
-            st, rec = self.step(st, jax.random.fold_in(key, st.step), params)
+            st, rec = self.step(st, jax.random.fold_in(key, st.step), params,
+                                n_active=n_active)
             if probes is not None:
                 ps = probes.record(ps, prev, st, rec)
             return (st, ps), rec

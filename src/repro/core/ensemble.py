@@ -47,7 +47,9 @@ from repro.sharding.rules import SHARD_MAP_NO_CHECK, shard_map
 
 def scan_replicas(step_fn, states: SimState, keys: jax.Array,
                   params: Optional[KernelParams], num_steps: int,
-                  interval: int, probes=None, probe_states=None, merge=None):
+                  interval: int, probes=None, probe_states=None, merge=None,
+                  extras=None, fold_by_replica_step: bool = False,
+                  do_update_fn=None):
     """The K-replica scan shared by EnsembleEngine (replica axis only) and
     distributed.DistributedEnsembleEngine (replica axis x data axis).
 
@@ -73,11 +75,52 @@ def scan_replicas(step_fn, states: SimState, keys: jax.Array,
     bitwise identical to a sequential probed run with the same key
     (DESIGN.md §12).  Returns (states, probe_states, records) — the probe
     slot is None when no probes ride along.
+
+    Serving hooks (repro/serve, DESIGN.md §14) — all default-off, the
+    lockstep ensemble path above is bitwise untouched:
+
+      * extras: optional (K,)-leading pytree of per-replica scalars (active
+        row counts, per-session step targets).  When given, `step_fn` owns
+        the whole per-replica step — signature
+        (state, key, params, do_upd, extra, probe_state)
+        -> (state, probe_state, record) — including probe recording and any
+        freeze logic, because a served slot may need to HOLD its state when
+        its session finished mid-round.
+      * fold_by_replica_step: fold each replica's key by ITS OWN carried
+        step counter instead of replica 0's.  Served slots are admitted at
+        different times, so their counters disagree — per-replica folding
+        reproduces exactly the fold_in(key, step) stream an isolated
+        `engine.simulate` of that session would draw.
+      * do_update_fn: optional scan-index predicate i -> bool overriding
+        the carried-counter connectivity-update schedule.  The service
+        admits/restores only at round boundaries with round length a
+        multiple of update_interval, so every live slot's counter satisfies
+        step ≡ i (mod interval) and the unbatched scan-index predicate is
+        correct for all of them — while finished (frozen) slots, whose
+        counters have stopped advancing, would poison a carried-counter
+        predicate.
     """
     def body(carry, i):
         st, ps = carry
-        ki = jax.vmap(lambda k: jax.random.fold_in(k, st.step[0]))(keys)
-        do_upd = ((st.step[0] + 1) % interval) == 0
+        if fold_by_replica_step:
+            ki = jax.vmap(jax.random.fold_in)(keys, st.step)
+        else:
+            ki = jax.vmap(lambda k: jax.random.fold_in(k, st.step[0]))(keys)
+        if do_update_fn is not None:
+            do_upd = do_update_fn(i)
+        else:
+            do_upd = ((st.step[0] + 1) % interval) == 0
+
+        if extras is not None:
+            def one_served(s, k, p, e, q):
+                return step_fn(s, k, p, do_upd, e, q)
+            if params is None:
+                st, ps, rec = jax.vmap(
+                    lambda s, k, e, q: one_served(s, k, None, e, q))(
+                        st, ki, extras, ps)
+            else:
+                st, ps, rec = jax.vmap(one_served)(st, ki, params, extras, ps)
+            return (st, ps), rec
 
         def one(s, k, p, q):
             prev = s

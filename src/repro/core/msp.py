@@ -25,6 +25,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import streams
+
 
 @dataclasses.dataclass(frozen=True)
 class MSPConfig:
@@ -96,7 +98,9 @@ def growth_curve(calcium: jnp.ndarray, eta: float, cfg: MSPConfig) -> jnp.ndarra
 def step_neurons(state: NeuronState, syn_input: jnp.ndarray,
                  key: jax.Array, cfg: MSPConfig,
                  u: jnp.ndarray | None = None,
-                 backend: str = "reference") -> NeuronState:
+                 backend: str = "reference",
+                 mask: jnp.ndarray | None = None,
+                 rng: str = "batched") -> NeuronState:
     """Phases 1 + 2 for one simulation step.
 
     syn_input: (n,) SIGNED count of presynaptic partners that spiked last
@@ -113,19 +117,27 @@ def step_neurons(state: NeuronState, syn_input: jnp.ndarray,
     bitwise identical spike/calcium streams, so the engine-level parity
     contract holds across backends.  Phase 2 (growth) always runs here: the
     growth curve is the structural-plasticity control law, not a hot spot.
+    mask: optional (n,) bool active-row mask (padded subdomains,
+    DESIGN.md §14).  Pad rows are forced inert AFTER the update — exact
+    zeros in x/refrac/calcium/elements and spiked=False — so they
+    contribute exact zeros to every downstream reduction; active rows are
+    bitwise untouched (where(True, v, 0) is v).
+    rng: "counter" draws the spike uniforms per neuron index
+    (streams.uniform_at), making the stream invariant to the row count.
     """
+    if u is None:
+        u = streams.uniform_at(
+            key, jnp.arange(state.x.shape[0], dtype=jnp.int32),
+            state.x.dtype) if rng == "counter" \
+            else jax.random.uniform(key, state.x.shape, state.x.dtype)
     if backend != "reference":
         from repro.kernels import ops
-        if u is None:
-            u = jax.random.uniform(key, state.x.shape, state.x.dtype)
         x, refrac, spiked, calcium = ops.msp_update(
             state.x, state.refrac, state.calcium, syn_input, u, cfg,
             use_pallas=ops.use_pallas_flag(backend))
     else:
         x = state.x + (cfg.x0 - state.x) / cfg.tau_x \
             + cfg.background + cfg.w_syn * syn_input
-        if u is None:
-            u = jax.random.uniform(key, x.shape, x.dtype)
         spiked = (u < x) & (state.refrac <= 0)
         refrac = jnp.where(spiked, cfg.refractory,
                            jnp.maximum(state.refrac - 1, 0))
@@ -134,5 +146,12 @@ def step_neurons(state: NeuronState, syn_input: jnp.ndarray,
     ax = jnp.maximum(state.ax_elems + growth_curve(calcium, cfg.eta_axon, cfg), 0.0)
     den = jnp.maximum(state.den_elems
                       + growth_curve(calcium, cfg.eta_dendrite, cfg), 0.0)
+    if mask is not None:
+        x = jnp.where(mask, x, 0.0)
+        refrac = jnp.where(mask, refrac, 0)
+        spiked = spiked & mask
+        calcium = jnp.where(mask, calcium, 0.0)
+        ax = jnp.where(mask, ax, 0.0)
+        den = jnp.where(mask, den, 0.0)
     return NeuronState(x=x, refrac=refrac, spiked=spiked, calcium=calcium,
                        ax_elems=ax, den_elems=den)

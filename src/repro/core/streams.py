@@ -1,0 +1,63 @@
+"""Size-invariant counter-mode RNG streams (DESIGN.md §14).
+
+The default engine draws (`jax.random.uniform(key, (n,))` etc.) are
+shape-dependent: threefry lays its counter out over the *array*, so the
+value at index i changes with the array length.  That is fine for a
+single simulation, but it breaks the padded-subdomain contract the serve
+layer needs — a session of n_active neurons running inside an n_slot-row
+padded slot must draw, at every active row, the exact bits an isolated
+n_active-row run would draw.
+
+Counter mode makes every draw a pure function of (key, logical index):
+each element folds its index into the key and draws a scalar.  Gathering,
+slicing, or padding the index set then commutes with the draw by
+construction — `uniform_at(key, idx[:m])` IS `uniform_at(key, idx)[:m]`
+bitwise — which is the whole contract.  `vmap` of scalar PRNG ops is
+elementwise-exact in JAX, so these helpers are safe under the ensemble
+vmap as well.
+
+Cost: one fold_in + one scalar draw per element instead of one vectorised
+draw per array — measurably slower, which is why counter mode is opt-in
+(`EngineConfig.rng = "counter"`); the default `"batched"` path is
+bitwise untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _fold_keys(key: jax.Array, idx: jnp.ndarray) -> jax.Array:
+    """Per-index keys: fold_in(key, idx[i]) for every element of idx."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+
+def uniform_at(key: jax.Array, idx: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """(len(idx),) uniforms; element i depends only on (key, idx[i])."""
+    return jax.vmap(lambda k: jax.random.uniform(k, (), dtype))(
+        _fold_keys(key, idx))
+
+
+def bits_at(key: jax.Array, idx: jnp.ndarray) -> jnp.ndarray:
+    """(len(idx),) uint32 bits; element i depends only on (key, idx[i])."""
+    return jax.vmap(lambda k: jax.random.bits(k, (), jnp.uint32))(
+        _fold_keys(key, idx))
+
+
+def gumbel_grid(key: jax.Array, rows: jnp.ndarray, cols: jnp.ndarray,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """(len(rows), len(cols)) Gumbel noise; element (i, j) depends only on
+    (key, rows[i], cols[j]).
+
+    Used for the descent/leaf-resolution slabs, where the batched draw's
+    shape would otherwise depend on occupancy counts or bucket widths:
+    keying each cell by its *logical* ids (box id x child, neuron row x
+    candidate slot) makes the slab invariant to how many rows/cols happen
+    to exist in a given (sub)problem.
+    """
+    def row(rk):
+        return jax.vmap(
+            lambda c: jax.random.gumbel(jax.random.fold_in(rk, c), (),
+                                        dtype))(cols)
+    return jax.vmap(row)(_fold_keys(key, rows))

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax import custom_batching
 
+from repro.core import streams
+
 
 def _segment_sum_n(vals: jnp.ndarray, seg_ids: jnp.ndarray,
                    n: int) -> jnp.ndarray:
@@ -51,6 +53,34 @@ def _segment_sum_n(vals: jnp.ndarray, seg_ids: jnp.ndarray,
         return flat.reshape(axis_size, n), True
 
     return seg(vals, seg_ids)
+
+
+def det_sum(vals: jnp.ndarray) -> jnp.ndarray:
+    """Padding-stable scalar sum of a NON-NEGATIVE 1-D float array.
+
+    `jnp.sum` (or any single reduce op) lets XLA pick the association, which
+    varies with the array length and the surrounding fusion context — so a
+    zero-padded array does not sum bitwise-equal to its prefix.  This builds
+    the reduction from EXPLICIT pairwise adds instead (XLA never re-associates
+    named adds): zero-pad to the next power of two, then halve.
+
+    Stability under zero-padding (DESIGN.md §14): for x_m a prefix of x_n
+    with zeros beyond m, every halving step down to pow2(m) adds an all-zero
+    upper half (a + 0.0 == a for a >= 0.0), after which the arrays — and
+    hence the remaining trees — are elementwise identical.  The non-negative
+    requirement matters only for the -0.0 corner (+0.0 + -0.0 is +0.0);
+    every caller sums calcium / squared deviations / spike indicators.
+    Elementwise adds are exact under vmap, so no custom batching rule is
+    needed for ensemble parity.
+    """
+    n = vals.shape[-1]
+    size = max(1, 1 << (n - 1).bit_length()) if n else 1
+    x = jnp.pad(vals, [(0, 0)] * (vals.ndim - 1) + [(0, size - n)])
+    while size > 1:
+        half = size // 2
+        x = x[..., :half] + x[..., half:]
+        size = half
+    return x[..., 0]
 
 
 class SynapseState(NamedTuple):
@@ -112,7 +142,8 @@ def _rank_within_segment(seg_ids: jnp.ndarray, prio_bits: jnp.ndarray,
 
 
 def delete_excess(state: SynapseState, ax_elems: jnp.ndarray,
-                  den_elems: jnp.ndarray, key: jax.Array) -> SynapseState:
+                  den_elems: jnp.ndarray, key: jax.Array, *,
+                  rng: str = "batched") -> SynapseState:
     """Phase-3 deletion: each neuron deletes (degree - floor(elements)) of its
     synapses uniformly at random, on both the axon and the dendrite side.
 
@@ -127,72 +158,97 @@ def delete_excess(state: SynapseState, ax_elems: jnp.ndarray,
     predicate would lower the cond to a select that sorts every replica on
     every update; the rule reduces the predicate over the whole batch (the
     cond survives, skipping the sorts whenever NO replica has excess) and
-    ranks all replicas in ONE flat lexsort with replica-offset segment ids."""
-    new_valid = _delete_excess_valid(state.src, state.dst, state.valid,
-                                     ax_elems, den_elems, key)
+    ranks all replicas in ONE flat lexsort with replica-offset segment ids.
+
+    rng="counter" keys each edge slot's priority by its SLOT INDEX
+    (streams.bits_at) instead of one shape-(E,) draw, so a table padded
+    with extra (never-valid) slots ranks its shared prefix identically to
+    the unpadded table (DESIGN.md §14)."""
+    fn = _DELETE_EXCESS_VALID[rng]
+    new_valid = fn(state.src, state.dst, state.valid,
+                   ax_elems, den_elems, key)
     return state._replace(valid=new_valid)
 
 
-@custom_batching.custom_vmap
-def _delete_excess_valid(src, dst, valid, ax_elems, den_elems, key):
-    n = ax_elems.shape[0]
-    k1, k2 = jax.random.split(key)
-    out_deg = jax.ops.segment_sum(valid.astype(jnp.int32), src, num_segments=n)
-    in_deg = jax.ops.segment_sum(valid.astype(jnp.int32), dst, num_segments=n)
-    excess_out = jnp.maximum(out_deg - jnp.floor(ax_elems).astype(jnp.int32), 0)
-    excess_in = jnp.maximum(in_deg - jnp.floor(den_elems).astype(jnp.int32), 0)
+def _make_delete_excess_valid(counter: bool):
+    def prio_bits(k, e):
+        if counter:
+            return streams.bits_at(k, jnp.arange(e, dtype=jnp.int32))
+        return jax.random.bits(k, (e,), jnp.uint32)
 
-    def side(seg_ids, excess, k):
-        def live(_):
-            rank = _rank_within_segment(
-                seg_ids, jax.random.bits(k, seg_ids.shape, jnp.uint32),
-                valid)
-            return rank < excess[seg_ids]
-        return jax.lax.cond(jnp.any(excess > 0), live,
-                            lambda _: jnp.zeros(seg_ids.shape, bool), None)
+    @custom_batching.custom_vmap
+    def _valid_fn(src, dst, valid, ax_elems, den_elems, key):
+        n = ax_elems.shape[0]
+        e = src.shape[0]
+        k1, k2 = jax.random.split(key)
+        out_deg = jax.ops.segment_sum(valid.astype(jnp.int32), src,
+                                      num_segments=n)
+        in_deg = jax.ops.segment_sum(valid.astype(jnp.int32), dst,
+                                     num_segments=n)
+        excess_out = jnp.maximum(
+            out_deg - jnp.floor(ax_elems).astype(jnp.int32), 0)
+        excess_in = jnp.maximum(
+            in_deg - jnp.floor(den_elems).astype(jnp.int32), 0)
 
-    kill = side(src, excess_out, k1) | side(dst, excess_in, k2)
-    return valid & ~kill
+        def side(seg_ids, excess, k):
+            def live(_):
+                rank = _rank_within_segment(seg_ids, prio_bits(k, e), valid)
+                return rank < excess[seg_ids]
+            return jax.lax.cond(jnp.any(excess > 0), live,
+                                lambda _: jnp.zeros(seg_ids.shape, bool), None)
+
+        kill = side(src, excess_out, k1) | side(dst, excess_in, k2)
+        return valid & ~kill
+
+    @_valid_fn.def_vmap
+    def _valid_fn_batched(axis_size, in_batched,
+                          src, dst, valid, ax_elems, den_elems, key):
+        kk = axis_size
+        args = [src, dst, valid, ax_elems, den_elems, key]
+        src, dst, valid, ax_elems, den_elems, key = [
+            a if b else jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (kk,) + x.shape), a)
+            for a, b in zip(args, in_batched)]
+        n = ax_elems.shape[-1]
+        e = src.shape[-1]
+        offs = (jnp.arange(kk, dtype=src.dtype) * n)[:, None]      # (K,1)
+        flat = lambda ids: (ids + offs).reshape(-1)
+        deg = lambda ids: jax.ops.segment_sum(
+            valid.astype(jnp.int32).reshape(-1), flat(ids),
+            num_segments=kk * n).reshape(kk, n)
+        excess_out = jnp.maximum(
+            deg(src) - jnp.floor(ax_elems).astype(jnp.int32), 0)
+        excess_in = jnp.maximum(
+            deg(dst) - jnp.floor(den_elems).astype(jnp.int32), 0)
+        ks = jax.vmap(jax.random.split)(key)                       # (K,2)
+
+        def side(seg_ids, excess, k):
+            def live(_):
+                prio = jax.vmap(lambda kr: prio_bits(kr, e))(k)
+                # Disjoint replica-offset segments: per-edge ranks are
+                # identical to the per-replica ranking (stable sort,
+                # per-replica prio bits).
+                rank = _rank_within_segment(flat(seg_ids), prio.reshape(-1),
+                                            valid.reshape(-1))
+                return (rank
+                        < excess.reshape(-1)[flat(seg_ids)]).reshape(kk, e)
+            return jax.lax.cond(jnp.any(excess > 0), live,
+                                lambda _: jnp.zeros((kk, e), bool), None)
+
+        kill = side(src, excess_out, ks[:, 0]) | side(dst, excess_in, ks[:, 1])
+        return valid & ~kill, True
+
+    return _valid_fn
 
 
-@_delete_excess_valid.def_vmap
-def _delete_excess_valid_batched(axis_size, in_batched,
-                                 src, dst, valid, ax_elems, den_elems, key):
-    kk = axis_size
-    args = [src, dst, valid, ax_elems, den_elems, key]
-    src, dst, valid, ax_elems, den_elems, key = [
-        a if b else jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (kk,) + x.shape), a)
-        for a, b in zip(args, in_batched)]
-    n = ax_elems.shape[-1]
-    e = src.shape[-1]
-    offs = (jnp.arange(kk, dtype=src.dtype) * n)[:, None]          # (K,1)
-    flat = lambda ids: (ids + offs).reshape(-1)
-    deg = lambda ids: jax.ops.segment_sum(
-        valid.astype(jnp.int32).reshape(-1), flat(ids),
-        num_segments=kk * n).reshape(kk, n)
-    excess_out = jnp.maximum(deg(src) - jnp.floor(ax_elems).astype(jnp.int32), 0)
-    excess_in = jnp.maximum(deg(dst) - jnp.floor(den_elems).astype(jnp.int32), 0)
-    ks = jax.vmap(jax.random.split)(key)                           # (K,2)
-
-    def side(seg_ids, excess, k):
-        def live(_):
-            prio = jax.vmap(
-                lambda kr: jax.random.bits(kr, (e,), jnp.uint32))(k)
-            # Disjoint replica-offset segments: per-edge ranks are identical
-            # to the per-replica ranking (stable sort, per-replica prio bits).
-            rank = _rank_within_segment(flat(seg_ids), prio.reshape(-1),
-                                        valid.reshape(-1))
-            return (rank < excess.reshape(-1)[flat(seg_ids)]).reshape(kk, e)
-        return jax.lax.cond(jnp.any(excess > 0), live,
-                            lambda _: jnp.zeros((kk, e), bool), None)
-
-    kill = side(src, excess_out, ks[:, 0]) | side(dst, excess_in, ks[:, 1])
-    return valid & ~kill, True
+_delete_excess_valid = _make_delete_excess_valid(False)
+_DELETE_EXCESS_VALID = {"batched": _delete_excess_valid,
+                        "counter": _make_delete_excess_valid(True)}
 
 
 def resolve_conflicts(partner: jnp.ndarray, request_cnt: jnp.ndarray,
-                      den_capacity: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+                      den_capacity: jnp.ndarray, key: jax.Array,
+                      rng: str = "batched") -> jnp.ndarray:
     """Dendrite-side acceptance (paper Sec. 4 'Each rank collects these
     requests, chooses locally which to accept').
 
@@ -200,12 +256,16 @@ def resolve_conflicts(partner: jnp.ndarray, request_cnt: jnp.ndarray,
     request_cnt:  (n,) number of vacant axons requesting (all to one partner —
                   the paper's FMM semantics)
     den_capacity: (n,) vacant dendrites available per neuron
+    rng:          "counter" keys each row's priority by its row index, so
+                  pad rows (always invalid, bucketed last) leave the active
+                  rows' acceptance untouched (DESIGN.md §14)
     returns       (n,) accepted count per axon-neuron.
     """
     n = partner.shape[0]
     valid = partner >= 0
     seg = jnp.where(valid, partner, n)           # bucket invalid at the end
-    prio = jax.random.bits(key, (n,), jnp.uint32)
+    prio = streams.bits_at(key, jnp.arange(n, dtype=jnp.int32)) \
+        if rng == "counter" else jax.random.bits(key, (n,), jnp.uint32)
     order = jnp.lexsort((prio, seg))
     seg_s = seg[order]
     cnt_s = jnp.where(valid[order], request_cnt[order], 0)
@@ -343,8 +403,15 @@ def _stage_units(partner: jnp.ndarray, accepted: jnp.ndarray,
 
 
 def insert(state: SynapseState, partner: jnp.ndarray, accepted: jnp.ndarray,
-           max_per_neuron: int) -> Tuple[SynapseState, jnp.ndarray]:
+           max_per_neuron: int, capacity: jnp.ndarray | None = None
+           ) -> Tuple[SynapseState, jnp.ndarray]:
     """Commit accepted requests as unit edges into free slots.
+
+    capacity: optional traced active slot budget — only slots < capacity are
+    treated as free (padded subdomains restrict the table to the first
+    n_active * edge_capacity_per_neuron slots so the free-slot order, the
+    placements, and the dropped count match the unpadded table's,
+    DESIGN.md §14).  None = every slot usable.
 
     Returns (new_state, number_of_dropped_units) — units are dropped only if
     the edge capacity overflows (sized generously by the engine; the counter
@@ -355,6 +422,8 @@ def insert(state: SynapseState, partner: jnp.ndarray, accepted: jnp.ndarray,
     buf_src, buf_dst, total_new = _stage_units(partner, accepted, k)
 
     free = ~state.valid
+    if capacity is not None:
+        free = free & (jnp.arange(free.shape[0], dtype=jnp.int32) < capacity)
     free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1            # (E,)
     take = free & (free_rank < total_new) & (free_rank < n * k)
     pick = jnp.minimum(free_rank, n * k - 1)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import expansions as ex
+from repro.core import streams
 from repro.core.multi_index import DEFAULT_ORDER
 from repro.core.octree import LevelData, OctreeStructure
 
@@ -154,9 +155,15 @@ def _tier_log_masses(child_ax_w, child_ax_c, child_gc, child_moms,
 
 def descend(structure: OctreeStructure, levels: List[LevelData],
             key: jax.Array, cfg: FMMConfig,
-            backend: str = "reference") -> jnp.ndarray:
+            backend: str = "reference", rng: str = "batched") -> jnp.ndarray:
     """Run the full descent; returns (8^depth,) target leaf id per source
-    leaf box (-1 where the leaf holds no vacant axons)."""
+    leaf box (-1 where the leaf holds no vacant axons).
+
+    rng="counter" keys each per-level Gumbel cell by (level, BOX ID, child)
+    instead of drawing an occupancy-shaped slab, so boxes present in two
+    structures over the same position prefix (a padded pool and its
+    unpadded prefix, DESIGN.md §14) draw identical noise regardless of how
+    many boxes are occupied around them."""
     depth = structure.depth
     # Level 0: the root's (only) pair is (root, root) — Alg. 1 stack init.
     tgt = jnp.zeros((1,), jnp.int32)
@@ -186,8 +193,11 @@ def descend(structure: OctreeStructure, levels: List[LevelData],
             cfg, valid, backend=backend)
 
         log_mass = jnp.where(nxt.den_w[tc] > 0, log_mass, NEG_INF)
-        gumbel = jax.random.gumbel(jax.random.fold_in(key, l + 1),
-                                   (occ.shape[0], 8), log_mass.dtype)
+        kl = jax.random.fold_in(key, l + 1)
+        gumbel = streams.gumbel_grid(
+            kl, occ, jnp.arange(8, dtype=jnp.int32), log_mass.dtype) \
+            if rng == "counter" \
+            else jax.random.gumbel(kl, (occ.shape[0], 8), log_mass.dtype)
         choice = jnp.argmax(log_mass + gumbel, axis=-1).astype(jnp.int32)
         new_tgt = (jnp.maximum(parent_tgt, 0) << 3) + choice
 
@@ -294,8 +304,8 @@ def resolve_leaf_partners(structure: OctreeStructure,
                           ax_vac: jnp.ndarray, den_vac: jnp.ndarray,
                           my_tgt: jnp.ndarray, key: jax.Array,
                           cfg: FMMConfig, *,
-                          row_start: Optional[jnp.ndarray] = None
-                          ) -> jnp.ndarray:
+                          row_start: Optional[jnp.ndarray] = None,
+                          rng: str = "batched") -> jnp.ndarray:
     """Neuron-level resolution inside the chosen leaf boxes.
 
     The paper's octree splits until leaves hold ONE neuron, so leaf-leaf pairs
@@ -348,8 +358,16 @@ def resolve_leaf_partners(structure: OctreeStructure,
         & (cand != rows[:, None])                                # no autapses
     logw = jnp.where(mask, logw, NEG_INF)
 
-    gumbel = slg(jax.random.gumbel(jax.random.fold_in(key, 10_000),
-                                   (n, max_leaf), logw.dtype))
+    kleaf = jax.random.fold_in(key, 10_000)
+    if rng == "counter":
+        # Keyed by (neuron row, candidate slot): a leaf bucket lists its
+        # active members first (stable Morton sort, index tie-break), so a
+        # padded pool's extra candidates extend the slot axis without
+        # disturbing the shared cells (DESIGN.md §14).
+        gumbel = streams.gumbel_grid(
+            kleaf, rows, jnp.arange(max_leaf, dtype=jnp.int32), logw.dtype)
+    else:
+        gumbel = slg(jax.random.gumbel(kleaf, (n, max_leaf), logw.dtype))
     pick = jnp.argmax(logw + gumbel, axis=-1)
     partner = jnp.take_along_axis(cand, pick[:, None], axis=-1)[:, 0]
     any_ok = jnp.any(mask, axis=-1)
@@ -360,13 +378,14 @@ def resolve_leaf_partners(structure: OctreeStructure,
 def find_partners(structure: OctreeStructure, levels: List[LevelData],
                   positions: jnp.ndarray, ax_vac: jnp.ndarray,
                   den_vac: jnp.ndarray, key: jax.Array,
-                  cfg: FMMConfig, backend: str = "reference") -> jnp.ndarray:
+                  cfg: FMMConfig, backend: str = "reference",
+                  rng: str = "batched") -> jnp.ndarray:
     """Alg. 1 `find_synapses` (choice phase): per-neuron partner requests."""
     k1, k2 = jax.random.split(key)
-    tgt_leaf = descend(structure, levels, k1, cfg, backend=backend)
+    tgt_leaf = descend(structure, levels, k1, cfg, backend=backend, rng=rng)
     my_tgt = tgt_leaf[jnp.asarray(structure.leaf_of)]
     return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
-                                 my_tgt, k2, cfg)
+                                 my_tgt, k2, cfg, rng=rng)
 
 
 def find_partners_sharded(structure: OctreeStructure, spans,

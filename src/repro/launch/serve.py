@@ -1,0 +1,106 @@
+"""Launch helpers for the serving layer: build a service, replay traffic.
+
+Shared by examples/serve_demo.py, the fig_serve benchmark, and the
+integration harness — one place that knows how to wire a
+`SimulationService` from plain numbers and drive a `TrafficGenerator`
+workload through it to completion.
+"""
+
+from __future__ import annotations
+
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import EngineConfig
+from repro.core.msp import MSPConfig
+from repro.core.traversal import FMMConfig
+from repro.serve import (SessionRequest, SimulationService, TrafficGenerator)
+
+
+def build_service(
+    pool_size: int,
+    *,
+    num_slots: int,
+    round_steps: int,
+    checkpoint_dir: Optional[str] = None,
+    method: str = "fmm",
+    speedup: float = 100.0,
+    sigma: float = 750.0,
+    seed: int = 42,
+    inhibitory_fraction: float = 0.0,
+    probes=None,
+    mesh=None,
+) -> SimulationService:
+    """A service over a uniform random position pool (the repo's standard
+    synthetic geometry: positions ~ U[0, 1000)^3 from a seeded generator,
+    calibrated MSP dynamics)."""
+    rng = np.random.default_rng(seed)
+    pool = rng.uniform(0.0, 1000.0, size=(pool_size, 3)).astype(np.float32)
+    msp_cfg = MSPConfig.calibrated(speedup=speedup)
+    fmm_cfg = FMMConfig(sigma=sigma)
+    engine_cfg = EngineConfig(method=method, inhibitory_fraction=inhibitory_fraction)
+    if checkpoint_dir is None:
+        checkpoint_dir = tempfile.mkdtemp(prefix="repro_serve_")
+    return SimulationService(
+        pool,
+        msp_cfg,
+        fmm_cfg,
+        engine_cfg,
+        num_slots=num_slots,
+        round_steps=round_steps,
+        checkpoint_dir=checkpoint_dir,
+        probes=probes,
+        mesh=mesh,
+    )
+
+
+def replay_traffic(
+    service: SimulationService,
+    traffic: List[Tuple[int, SessionRequest]],
+    max_rounds: int = 10_000,
+) -> List[str]:
+    """Feed [(arrival_round, request)] into the service, submitting each
+    request at its arrival round, and run rounds until every session
+    finishes.  Returns the full event log."""
+    pending = sorted(traffic, key=lambda t: t[0])
+    events: List[str] = []
+    i = 0
+    for _ in range(max_rounds):
+        while i < len(pending) and pending[i][0] <= service.round_idx:
+            service.submit(pending[i][1])
+            i += 1
+        events.extend(service.run_round())
+        if i == len(pending) and all(s.status == "finished" for s in service.sessions.values()):
+            return events
+    raise RuntimeError(f"traffic did not drain in {max_rounds} rounds")
+
+
+def default_traffic(
+    *,
+    seed: int,
+    num_sessions: int,
+    pool_size: int,
+    round_steps: int,
+    max_rounds_of_work: int = 4,
+) -> List[Tuple[int, "SessionRequest"]]:
+    """The harness's standard workload: sizes in [pool/3, pool], budgets up
+    to `max_rounds_of_work` rounds with ragged tails, ~30% idle gaps."""
+    gen = TrafficGenerator(
+        seed=seed,
+        num_sessions=num_sessions,
+        n_lo=max(8, pool_size // 3),
+        n_hi=pool_size,
+        max_steps=max_rounds_of_work * round_steps,
+        step_quantum=round_steps,
+    )
+    return gen.generate()
+
+
+def occupancy_histogram(service: SimulationService) -> Dict[int, int]:
+    """occupancy -> number of executed rounds at that occupancy."""
+    hist: Dict[int, int] = {}
+    for k in service.occupancy_log:
+        hist[k] = hist.get(k, 0) + 1
+    return hist

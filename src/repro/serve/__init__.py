@@ -1,0 +1,32 @@
+"""Simulation-as-a-service: continuous batching over the ensemble axis.
+
+See serve/service.py for the architecture and DESIGN.md §14 for the
+bitwise heterogeneous-batching contract; docs/serve.md is the user guide.
+"""
+
+from repro.serve.batcher import BatcherError, SlotBatcher
+from repro.serve.service import (SessionResult, SimulationService, SlotExtras)
+from repro.serve.session import (
+    EVICTED,
+    FINISHED,
+    QUEUED,
+    RUNNING,
+    Session,
+    SessionRequest,
+    TrafficGenerator,
+)
+
+__all__ = [
+    "BatcherError",
+    "SlotBatcher",
+    "SessionResult",
+    "SimulationService",
+    "SlotExtras",
+    "Session",
+    "SessionRequest",
+    "TrafficGenerator",
+    "QUEUED",
+    "RUNNING",
+    "EVICTED",
+    "FINISHED",
+]

@@ -199,6 +199,27 @@ def ensemble_spec(tree: PyTree, axis: str = "ensemble", dim: int = 0) -> PyTree:
     return jax.tree.map(lambda _: s, tree)
 
 
+def serve_round_specs(states: PyTree, params: PyTree, extras: PyTree,
+                      probe_states: PyTree, record_template: PyTree,
+                      axis: str = "ensemble"):
+    """(in_specs, out_specs) for the serving layer's round program.
+
+    The served round (repro/serve/service.py) is `scan_replicas` over the
+    slot axis with three extra inputs vs the plain ensemble path: raw
+    (K, ...) uint32 key data (wrapped to typed keys inside the program),
+    the per-slot SlotExtras scalars, and the probe-state carry.  Slots
+    never communicate — the same zero-collective data parallelism as
+    `ensemble_spec` — and records come back (round_steps, K), so their
+    slot axis sits at dim 1."""
+    state_spec = ensemble_spec(states, axis)
+    probe_spec = ensemble_spec(probe_states, axis)
+    in_specs = (state_spec, P(axis), ensemble_spec(params, axis),
+                ensemble_spec(extras, axis), probe_spec)
+    out_specs = (state_spec, probe_spec,
+                 ensemble_spec(record_template, axis, dim=1))
+    return in_specs, out_specs
+
+
 # -- owner-span pyramid partials (distributed upward pass) ---------------------
 
 def pyramid_input_spec() -> P:

@@ -1,0 +1,223 @@
+"""Padded-subdomain parity: the serving layer's core numerical contract.
+
+The session manager packs an n-neuron session into a fixed-width slot of
+`N_SLOT` rows by padding with inert neurons behind a traced active-row
+mask (DESIGN.md §14).  The contract is BITWISE: running the padded
+engine with `n_active=n` must produce, on the first n rows, exactly the
+records, edge tables, and probe buffers an isolated n-neuron engine
+produces — including through a forced-deletion regime — with the padded
+tail exactly inert.
+
+The non-power-of-two active count (61 of 96) is deliberate: it exercises
+the padded halving-tree reductions off their natural sizes, where the
+FMA-contraction hazards pinned by engine._pin_f32 actually bite.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import EngineConfig, PlasticityEngine
+from repro.core.msp import MSPConfig
+from repro.core.probes import CalciumProbe, ProbeSet, SpikeRasterProbe
+from repro.core.traversal import FMMConfig
+
+N_SLOT, N_ACT = 96, 61
+STEPS = 400  # past several connectivity updates (interval = 100)
+DEL_STEPS = 100  # forced-deletion continuation length
+SPEEDUP = 400.0  # non-vacuous dynamics at this scale (synapses form)
+
+
+def _positions(n):
+    return np.random.default_rng(42).uniform(0, 1000, (n, 3)).astype(np.float32)
+
+
+def _engines(method="fmm"):
+    pool = _positions(N_SLOT)
+    msp = MSPConfig.calibrated(speedup=SPEEDUP)
+    fmm = FMMConfig(c1=8, c2=8)
+    # Pin the padded pool's tree depth on the isolated engine too: the
+    # contract compares streams across row counts, so the spatial data
+    # structure must not re-deepen under the smaller n (DESIGN.md §14).
+    depth = PlasticityEngine(pool, msp, fmm, EngineConfig(method=method)).structure.depth
+    ecfg = EngineConfig(method=method, rng="counter", depth=depth, inhibitory_fraction=0.1)
+    pad = PlasticityEngine(pool, msp, fmm, ecfg)
+    iso = PlasticityEngine(pool[:N_ACT], msp, fmm, ecfg)
+    return pad, iso
+
+
+def _pset():
+    return ProbeSet([SpikeRasterProbe(), CalciumProbe()], chunk_size=STEPS)
+
+
+def _force_deletion(state, n):
+    """Zero the first n rows' synaptic elements so the next connectivity
+    update must delete bound synapses (natural deletions are too rare at
+    test scale to exercise the deletion path)."""
+    neu = state.neurons._replace(
+        ax_elems=state.neurons.ax_elems.at[:n].set(0.0),
+        den_elems=state.neurons.den_elems.at[:n].set(0.0),
+    )
+    return state._replace(neurons=neu)
+
+
+def _run(method="fmm"):
+    pad, iso = _engines(method)
+    key = jax.random.key(7)
+    na = jnp.asarray(N_ACT, jnp.int32)
+    st_p, rec_p, ps_p = pad.simulate(pad.init_state(), key, STEPS, probes=_pset(), n_active=na)
+    st_i, rec_i, ps_i = iso.simulate(iso.init_state(), key, STEPS, probes=_pset())
+    # forced-deletion continuation from the evolved states
+    st_p2, rec_p2 = pad.simulate(_force_deletion(st_p, N_ACT), key, DEL_STEPS, n_active=na)
+    st_i2, rec_i2 = iso.simulate(_force_deletion(st_i, N_ACT), key, DEL_STEPS)
+    return dict(
+        pad=pad,
+        iso=iso,
+        st_p=st_p,
+        st_i=st_i,
+        rec_p=rec_p,
+        rec_i=rec_i,
+        ps_p=ps_p,
+        ps_i=ps_i,
+        st_p2=st_p2,
+        st_i2=st_i2,
+        rec_p2=rec_p2,
+        rec_i2=rec_i2,
+    )
+
+
+@pytest.fixture(scope="module")
+def run():
+    return _run("fmm")
+
+
+def _assert_bits_equal(a, b, what):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, f"{what}: shape {a.shape} vs {b.shape}"
+    av = a.view(np.uint8) if a.dtype.kind == "f" else a
+    bv = b.view(np.uint8) if b.dtype.kind == "f" else b
+    assert np.array_equal(av, bv), f"{what}: bitwise mismatch"
+
+
+def _assert_records_equal(rec_a, rec_b):
+    for f in rec_a._fields:
+        _assert_bits_equal(getattr(rec_a, f), getattr(rec_b, f), f"records.{f}")
+
+
+def test_records_bitwise_equal(run):
+    _assert_records_equal(run["rec_p"], run["rec_i"])
+
+
+def test_dynamics_not_vacuous(run):
+    # a parity test over an all-zero network proves nothing
+    assert int(np.asarray(run["rec_i"].num_synapses)[-1]) > 0
+    assert float(np.asarray(run["rec_i"].spike_rate).sum()) > 0.0
+
+
+def test_final_state_prefix_bitwise_equal(run):
+    st_p, st_i = run["st_p"], run["st_i"]
+    for f in st_i.neurons._fields:
+        _assert_bits_equal(
+            np.asarray(getattr(st_p.neurons, f))[:N_ACT],
+            getattr(st_i.neurons, f),
+            f"neurons.{f}",
+        )
+    # padded tail is exactly inert
+    for f in ("x", "calcium", "ax_elems", "den_elems"):
+        tail = np.asarray(getattr(st_p.neurons, f))[N_ACT:]
+        assert not tail.any(), f"neurons.{f} tail not zero"
+    assert not np.asarray(st_p.neurons.spiked)[N_ACT:].any()
+
+
+def test_edge_table_prefix_equal(run):
+    st_p, st_i = run["st_p"], run["st_i"]
+    E = run["iso"].edge_capacity
+    for f in ("src", "dst", "valid"):
+        _assert_bits_equal(
+            np.asarray(getattr(st_p.edges, f))[:E],
+            getattr(st_i.edges, f),
+            f"edges.{f}",
+        )
+    # no synapse may involve a padded row, so nothing lives beyond the
+    # isolated engine's capacity prefix
+    assert not np.asarray(st_p.edges.valid)[E:].any()
+    assert int(st_p.dropped) == int(st_i.dropped)
+
+
+def test_probe_buffers_prefix_equal_and_tail_inert(run):
+    bufs_p, bufs_i = run["ps_p"].buffers, run["ps_i"].buffers
+    assert set(bufs_p) == {"spikes", "calcium"}
+    for name in bufs_p:
+        rows = np.asarray(bufs_p[name])[:STEPS]
+        iso = np.asarray(bufs_i[name])[:STEPS]
+        _assert_bits_equal(rows[:, :N_ACT], iso, f"probe.{name}")
+        assert not rows[:, N_ACT:].any(), f"probe.{name} tail not inert"
+
+
+def test_forced_deletion_bitwise_equal(run):
+    # the zero-element step must actually delete synapses...
+    before = int(np.asarray(run["rec_i"].num_synapses)[-1])
+    after = int(np.asarray(run["rec_i2"].num_synapses)[-1])
+    assert after < before, f"no deletions: {before} -> {after}"
+    # ...and the padded run must track the isolated one through them
+    _assert_records_equal(run["rec_p2"], run["rec_i2"])
+    E = run["iso"].edge_capacity
+    for f in ("src", "dst", "valid"):
+        _assert_bits_equal(
+            np.asarray(getattr(run["st_p2"].edges, f))[:E],
+            getattr(run["st_i2"].edges, f),
+            f"edges.{f}",
+        )
+    assert not np.asarray(run["st_p2"].edges.valid)[E:].any()
+
+
+def test_service_on_one_device_mesh_bitwise():
+    """The padded contract must also hold when the service runs its round
+    program shard_map-ed over a 1-device ensemble mesh — and at pool=48
+    with 2 vmapped slots, the exact shape where reduction fusion once
+    produced a 1-ulp calcium_std drift (engine._pin_f32, DESIGN.md §14).
+    """
+    import tempfile
+
+    from repro.launch.mesh import make_ensemble_mesh
+    from repro.launch.serve import build_service, replay_traffic
+    from repro.serve import SessionRequest
+
+    with tempfile.TemporaryDirectory() as tmp:
+        svc = build_service(
+            48,
+            num_slots=2,
+            round_steps=100,
+            speedup=SPEEDUP,
+            seed=42,
+            checkpoint_dir=tmp,
+            mesh=make_ensemble_mesh(1),
+        )
+        idle_req = SessionRequest(
+            "m0", n_neurons=30, num_steps=150, seed=3, idle_after=100, idle_rounds=1
+        )
+        reqs = [
+            (0, idle_req),
+            (0, SessionRequest("m1", n_neurons=48, num_steps=200, seed=4)),
+        ]
+        events = replay_traffic(svc, reqs)
+        # the idle gap must force a real evict/restore cycle
+        assert any("evicted" in e for e in events)
+        assert any("restored" in e for e in events)
+        for _, req in reqs:
+            res = svc.result(req.session_id)
+            eng = svc.isolated_engine(req.n_neurons)
+            _, recs = eng.simulate(eng.init_state(), jax.random.key(req.seed), req.num_steps)
+            _assert_records_equal(res.records, recs)
+        svc.close()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["barnes_hut", "direct"])
+def test_padded_parity_other_methods(method):
+    run = _run(method)
+    _assert_records_equal(run["rec_p"], run["rec_i"])
+    _assert_records_equal(run["rec_p2"], run["rec_i2"])
+    assert int(np.asarray(run["rec_i"].num_synapses)[-1]) > 0

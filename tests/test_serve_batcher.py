@@ -1,0 +1,164 @@
+"""Property-based tests for the serving layer's slot allocator.
+
+serve/batcher.SlotBatcher is a pure host-side state machine, so its
+invariants can be checked over arbitrary event orderings without touching
+arrays (the module-docstring contract):
+
+  I1  no two live sessions ever share a slot;
+  I2  a slot is reused only after its previous occupant's release
+      completed;
+  I3  conservation — admitted == live + evicted + finished + queued
+      restores — at every point.
+
+The random-walk test drives a batcher with a seeded stream of admissible
+events (submit / admit / finish / evict / restore), mirrors it against an
+independent model, and checks the invariants from the model's view after
+every transition.  The batcher's own `check()` runs internally on every
+transition as well, so a violation surfaces as BatcherError even if the
+model misses it.
+"""
+
+import random
+
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.serve import BatcherError, SlotBatcher
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_random_event_walk_keeps_invariants(seed):
+    rng = random.Random(seed)
+    num_slots = rng.randint(1, 5)
+    b = SlotBatcher(num_slots)
+    # model: session id -> state in {queued, live, evicted, finished}
+    model = {}
+    ever_admitted = set()
+    next_id = 0
+    for _ in range(rng.randint(20, 120)):
+        ops = ["submit"]
+        if any(s == "queued" for s in model.values()):
+            ops.append("admit")
+        live = [sid for sid, s in model.items() if s == "live"]
+        if live:
+            ops += ["finish", "evict"]
+        ev = [sid for sid, s in model.items() if s == "evicted"]
+        if ev:
+            ops.append("restore")
+        op = rng.choice(ops)
+
+        if op == "submit":
+            sid = f"s{next_id}"
+            next_id += 1
+            b.enqueue(sid)
+            model[sid] = "queued"
+        elif op == "admit":
+            got = b.admit_next()
+            if got is None:
+                assert not b.free_slots() or b.queued == 0
+            else:
+                sid, slot, _ = got
+                assert model[sid] == "queued"
+                assert 0 <= slot < num_slots
+                model[sid] = "live"
+                ever_admitted.add(sid)
+        elif op in ("finish", "evict"):
+            sid = rng.choice(live)
+            slot = b.slot_of(sid)
+            b.release(sid, finished=(op == "finish"))
+            assert b.occupant(slot) is None  # slot actually freed
+            model[sid] = "finished" if op == "finish" else "evicted"
+        elif op == "restore":
+            sid = rng.choice(ev)
+            b.enqueue(sid, restore=True)
+            model[sid] = "queued"
+
+        # I1/I2 from the model's view: every live session holds exactly
+        # the slot the batcher reports, and no slot is double-booked.
+        live_now = [sid for sid, s in model.items() if s == "live"]
+        slots = [b.slot_of(sid) for sid in live_now]
+        assert None not in slots
+        assert len(set(slots)) == len(slots)
+        assert len(live_now) == b.live <= num_slots
+        for sid in live_now:
+            assert b.occupant(b.slot_of(sid)) == sid
+        # I3: admitted counts first admissions only; queued restores stay
+        # counted (they were admitted once) while the batcher's `evicted`
+        # tracks only sessions currently on disk.
+        assert b.admitted == len(ever_admitted)
+        assert b.evicted == sum(1 for s in model.values() if s == "evicted")
+        assert b.finished == sum(1 for s in model.values() if s == "finished")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_drain_conserves_sessions(seed):
+    """Submit a burst, churn admissions/evictions, then drain: every
+    session ends finished and the lifetime counters balance."""
+    rng = random.Random(seed)
+    b = SlotBatcher(rng.randint(1, 4))
+    n = rng.randint(1, 12)
+    for i in range(n):
+        b.enqueue(f"s{i}")
+    evicted_once = set()
+    for _ in range(400):
+        while b.admit_next() is not None:
+            pass
+        live = [sid for sid, _ in b.live_items()]
+        if not live and b.queued == 0:
+            break
+        for sid in live:
+            if rng.random() < 0.3 and sid not in evicted_once:
+                b.release(sid, finished=False)
+                evicted_once.add(sid)
+                b.enqueue(sid, restore=True)
+            else:
+                b.release(sid, finished=True)
+    assert b.finished == b.admitted == n
+    assert b.live == 0 and b.evicted == 0 and b.queued == 0
+
+
+def test_fifo_admission_lowest_slot_first():
+    b = SlotBatcher(3)
+    for sid in ["a", "b", "c", "d"]:
+        b.enqueue(sid)
+    assert b.admit_next() == ("a", 0, False)
+    assert b.admit_next() == ("b", 1, False)
+    assert b.admit_next() == ("c", 2, False)
+    assert b.admit_next() is None  # full
+    b.release("b", finished=True)
+    assert b.admit_next() == ("d", 1, False)  # freed slot, FIFO queue
+
+
+def test_restore_may_land_in_a_different_slot():
+    b = SlotBatcher(2)
+    b.enqueue("a")
+    b.enqueue("b")
+    assert b.admit_next() == ("a", 0, False)
+    assert b.admit_next() == ("b", 1, False)
+    b.release("a", finished=False)  # evict a from slot 0
+    b.enqueue("c")
+    assert b.admit_next() == ("c", 0, False)  # newcomer takes slot 0
+    b.release("b", finished=True)
+    b.enqueue("a", restore=True)
+    assert b.admit_next() == ("a", 1, True)  # a restores into slot 1
+
+
+def test_error_paths():
+    with pytest.raises(ValueError):
+        SlotBatcher(0)
+    b = SlotBatcher(2)
+    b.enqueue("a")
+    with pytest.raises(BatcherError):
+        b.enqueue("a")  # already queued
+    b.admit_next()
+    with pytest.raises(BatcherError):
+        b.enqueue("a")  # already live
+    with pytest.raises(BatcherError):
+        b.release("ghost", finished=True)  # not live
+    with pytest.raises(BatcherError):
+        b.enqueue("ghost", restore=True)  # never admitted
+    b.release("a", finished=True)
+    with pytest.raises(BatcherError):
+        b.enqueue("a")  # ids are single-use

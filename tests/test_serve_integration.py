@@ -1,0 +1,200 @@
+"""TGI-style integration harness for the simulation service.
+
+Seeded synthetic traffic — staggered arrivals, heterogeneous sizes and
+step counts, idle gaps that force evict/restore cycles — is replayed
+through one `SimulationService`, then EVERY session's outputs are
+compared bitwise against an isolated `PlasticityEngine.simulate` of that
+session's own size (DESIGN.md §14).  The contract is unconditional: it
+must not matter which batch-mates a session shared slots with, which
+round it was admitted in, or whether it was evicted to disk and restored
+into a different slot along the way.
+
+The traffic seed is pinned (not hunted per-run) and the coverage test
+asserts the scenario actually exercises the contract — admissions over
+several rounds, at least one evict AND restore, full occupancy, a
+mid-round finisher — so a regression in the generator that silently
+degrades the scenario fails loudly rather than weakening the harness.
+"""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.probes import CalciumProbe, ProbeSet, SpikeRasterProbe
+from repro.launch.serve import (build_service, default_traffic, occupancy_histogram, replay_traffic)
+from repro.serve import SessionRequest
+
+POOL, SLOTS, ROUND = 64, 4, 100
+CHUNK = 300
+
+
+def _isolated(svc, req, chunk):
+    """The ground truth a served session must bitwise reproduce."""
+    eng = svc.isolated_engine(req.n_neurons)
+    pset = ProbeSet([SpikeRasterProbe(), CalciumProbe()], chunk_size=chunk)
+    return eng.simulate(eng.init_state(), jax.random.key(req.seed), req.num_steps, probes=pset)
+
+
+def _assert_session_matches(svc, req, chunk):
+    res = svc.result(req.session_id)
+    st, recs, ps = _isolated(svc, req, chunk)
+    n = req.n_neurons
+    for f in res.records._fields:
+        a = np.asarray(getattr(res.records, f))
+        b = np.asarray(getattr(recs, f))
+        assert a.shape == b.shape, (req.session_id, f)
+        assert np.array_equal(a.view(np.uint8), b.view(np.uint8)), (
+            f"{req.session_id}: records.{f} not bitwise equal"
+        )
+    for f in st.neurons._fields:
+        a = np.asarray(getattr(res.final_state.neurons, f))[:n]
+        b = np.asarray(getattr(st.neurons, f))
+        av = a.view(np.uint8) if a.dtype.kind == "f" else a
+        bv = b.view(np.uint8) if b.dtype.kind == "f" else b
+        assert np.array_equal(av, bv), f"{req.session_id}: neurons.{f} not bitwise equal"
+    E = svc.isolated_engine(n).edge_capacity
+    for f in ("src", "dst", "valid"):
+        a = np.asarray(getattr(res.final_state.edges, f))[:E]
+        b = np.asarray(getattr(st.edges, f))
+        assert np.array_equal(a, b), f"{req.session_id}: edges.{f}"
+    assert not np.asarray(res.final_state.edges.valid)[E:].any(), (
+        f"{req.session_id}: synapse touching a padded row"
+    )
+    if req.record_probes:
+        assert set(res.probe_rows) == {"spikes", "calcium"}
+        for name, rows in res.probe_rows.items():
+            iso = np.asarray(ps.buffers[name])[:req.num_steps]
+            a = rows[:, :n]
+            av = a.view(np.uint8) if a.dtype.kind == "f" else a
+            iv = iso.view(np.uint8) if iso.dtype.kind == "f" else iso
+            assert np.array_equal(av, iv), f"{req.session_id}: probe {name} not bitwise equal"
+            assert not rows[:, n:].any(), f"{req.session_id}: probe {name} padded tail not inert"
+    return recs
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Replay the pinned traffic once; every test reads the same run."""
+    pset = ProbeSet([SpikeRasterProbe(), CalciumProbe()], chunk_size=CHUNK)
+    with tempfile.TemporaryDirectory() as tmp:
+        svc = build_service(
+            POOL,
+            num_slots=SLOTS,
+            round_steps=ROUND,
+            speedup=400.0,
+            seed=42,
+            checkpoint_dir=tmp,
+            probes=pset,
+        )
+        traffic = default_traffic(
+            seed=6,
+            num_sessions=8,
+            pool_size=POOL,
+            round_steps=ROUND,
+            max_rounds_of_work=3,
+        )
+        events = replay_traffic(svc, traffic)
+        yield svc, traffic, events
+        svc.close()
+
+
+def test_traffic_covers_the_contract(served):
+    svc, traffic, events = served
+    reqs = [req for _, req in traffic]
+    assert len(reqs) >= 8
+    # heterogeneous sizes and step counts
+    assert len({r.n_neurons for r in reqs}) >= 3
+    assert len({r.num_steps for r in reqs}) >= 2
+    # staggered arrivals across several rounds
+    assert len({arr for arr, _ in traffic}) >= 3
+    # at least one session idles long enough to be evicted, then restored
+    assert sum("evicted" in e for e in events) >= 1
+    assert sum("restored" in e for e in events) >= 1
+    # the batch actually filled up at some point
+    assert max(occupancy_histogram(svc)) == SLOTS
+    # sessions finish at different times (continuous batching, not a
+    # static batch): some slot turns over mid-run
+    assert sum("finished" in e for e in events) == 8
+    assert sum("admitted" in e for e in events) == 8
+
+
+def test_every_session_bitwise_matches_isolated_run(served):
+    svc, traffic, _ = served
+    nsyn = {}
+    for _, req in traffic:
+        recs = _assert_session_matches(svc, req, CHUNK)
+        nsyn[req.session_id] = int(np.asarray(recs.num_synapses)[-1])
+    # the scenario is not vacuous: most sessions grew synapses
+    assert sum(1 for v in nsyn.values() if v > 0) >= len(nsyn) // 2
+
+
+def test_batcher_accounting_after_drain(served):
+    svc, traffic, _ = served
+    b = svc.batcher
+    assert b.finished == b.admitted == len(traffic)
+    assert b.live == 0 and b.evicted == 0 and b.queued == 0
+    b.check()
+    # every session object reports finished with all steps done
+    for s in svc.sessions.values():
+        assert s.status == "finished"
+        assert s.steps_done == s.request.num_steps
+
+
+def test_submit_validation(served):
+    svc, traffic, _ = served
+    with pytest.raises(ValueError, match="duplicate"):
+        svc.submit(traffic[0][1])
+    with pytest.raises(ValueError, match="exceeds the pool"):
+        svc.submit(SessionRequest("too-big", n_neurons=POOL + 1, num_steps=ROUND, seed=0))
+    # the probe chunk bound only binds sessions that record probes
+    with pytest.raises(ValueError, match="chunk_size"):
+        svc.submit(
+            SessionRequest(
+                "too-long", n_neurons=8, num_steps=CHUNK + ROUND, seed=0, record_probes=True
+            )
+        )
+    with pytest.raises(ValueError, match="positive"):
+        SessionRequest("bad", n_neurons=0, num_steps=ROUND, seed=0)
+    with pytest.raises(ValueError, match="positive"):
+        SessionRequest("bad", n_neurons=8, num_steps=-1, seed=0)
+
+
+def test_result_requires_finished_session(served):
+    svc, _, _ = served
+    with pytest.raises(KeyError, match="unknown session"):
+        svc.result("never-submitted")
+
+
+@pytest.mark.slow
+def test_soak_heavier_traffic_bitwise():
+    """Bigger fleet, more slots, longer ragged sessions, more idle gaps —
+    the same unconditional bitwise contract."""
+    chunk = 400
+    pset = ProbeSet([SpikeRasterProbe(), CalciumProbe()], chunk_size=chunk)
+    with tempfile.TemporaryDirectory() as tmp:
+        svc = build_service(
+            POOL,
+            num_slots=6,
+            round_steps=ROUND,
+            speedup=400.0,
+            seed=42,
+            checkpoint_dir=tmp,
+            probes=pset,
+        )
+        traffic = default_traffic(
+            seed=3,
+            num_sessions=14,
+            pool_size=POOL,
+            round_steps=ROUND,
+            max_rounds_of_work=4,
+        )
+        events = replay_traffic(svc, traffic)
+        assert sum("evicted" in e for e in events) >= 2
+        assert sum("restored" in e for e in events) >= 2
+        for _, req in traffic:
+            _assert_session_matches(svc, req, chunk)
+        assert svc.batcher.finished == len(traffic)
+        svc.close()
