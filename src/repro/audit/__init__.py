@@ -1,0 +1,42 @@
+"""Static contract auditor: jaxpr-level determinism & collective-scoping
+lint (DESIGN.md §15, docs/audit.md).
+
+The bitwise reproducibility contract — distributed/batched/padded runs
+bitwise identical to single-device `PlasticityEngine.simulate` — is
+enforced at runtime by the parity suites; this package enforces its known
+*static* failure shapes at lint time, before anything runs:
+
+  R1  bit-pin coverage      record-path mean/std must pass through the
+                            `_pin_f32` int32-bitcast round-trip
+  R2  collective scoping    collectives only over declared axes
+                            (sharding/rules.AXIS_CONTRACTS) and only
+                            inside entry points scoped to them
+  R3  cond-vs-select        O(E) gathers stay under a real `lax.cond`
+                            when vmapped
+  R4  reduction order       no raw float reductions over padded/sharded
+                            axis sizes outside the sanctioned helpers
+
+plus an AST lint layer (`repro.audit.astlint`) for host-sync calls and
+naked collectives in jit-reachable modules.  Entry points are declared in
+plain-data ``AUDIT`` dicts next to the code they audit; `tools/run_audit.py`
+is the CLI, wired into CI as a blocking job.
+"""
+
+from repro.audit.report import Finding, Report
+from repro.audit.rules import RULES, audit_jaxpr
+from repro.audit.tracer import EntrySpec, audit_entries, audit_entry, registry
+from repro.audit.walker import EqnContext, iter_eqns, iter_jaxprs
+
+__all__ = [
+    "EntrySpec",
+    "EqnContext",
+    "Finding",
+    "Report",
+    "RULES",
+    "audit_entries",
+    "audit_entry",
+    "audit_jaxpr",
+    "iter_eqns",
+    "iter_jaxprs",
+    "registry",
+]

@@ -1,0 +1,184 @@
+"""AST-level lint for jit-reachable modules (DESIGN.md §15).
+
+Two checks, both pure stdlib (no jax import, no module execution):
+
+* host-sync calls — ``.item()``, ``float(...)``, ``time.time()`` /
+  ``time.perf_counter()`` force a device sync (or smuggle host time into a
+  traced value) when they appear on a jit path.  Legitimate trace-time
+  uses (static config math) opt out per-line with an ``# audit: ok``
+  pragma.
+* naked collectives — ``lax.psum``/``all_gather``/... may only be bound in
+  modules whose ``AUDIT`` dict declares ``collectives_allowed: True``
+  (core/distributed.py and core/traversal.py); everywhere else collectives
+  must arrive as injected ``merge`` callables so rule R2 can see every
+  axis at one choke point.
+
+The jit-reachable set is the module list below: everything under
+``core/`` and ``kernels/`` except the host-side offline ``core/analysis``,
+plus the serve round program.  Host-side schedulers (serve/batcher,
+checkpoint, launch) are intentionally out of scope.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.audit.report import Finding
+
+PRAGMA = "# audit: ok"
+
+# Jit-reachable source, relative to the repo's src/ directory.
+JIT_REACHABLE_DIRS = ("repro/core", "repro/kernels")
+JIT_REACHABLE_FILES = ("repro/serve/service.py",)
+HOST_SIDE_EXCEPTIONS = ("repro/core/analysis.py",)  # offline graph statistics
+
+COLLECTIVE_NAMES = frozenset(
+    {
+        "psum",
+        "pmean",
+        "pmax",
+        "pmin",
+        "all_gather",
+        "psum_scatter",
+        "reduce_scatter",
+        "all_to_all",
+        "ppermute",
+    }
+)
+
+HOST_SYNC_ATTRS = frozenset({"item"})
+HOST_TIME_ATTRS = frozenset({"time", "perf_counter", "monotonic"})
+
+
+def src_root(start: Path | None = None) -> Path:
+    """Locate the repo's src/ directory from this installed module."""
+    here = start or Path(__file__).resolve()
+    for parent in here.parents:
+        if parent.name == "src" and (parent / "repro").is_dir():
+            return parent
+    raise FileNotFoundError("cannot locate the src/ root above " + str(here))
+
+
+def iter_module_paths(root: Path | None = None) -> list[Path]:
+    root = root or src_root()
+    paths: list[Path] = []
+    for d in JIT_REACHABLE_DIRS:
+        paths.extend(sorted((root / d).glob("*.py")))
+    for f in JIT_REACHABLE_FILES:
+        paths.append(root / f)
+    skip = {root / f for f in HOST_SIDE_EXCEPTIONS}
+    return [p for p in paths if p not in skip]
+
+
+def _module_flags(tree: ast.Module) -> dict:
+    """The module's plain-data AUDIT dict, if it has one (no execution)."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "AUDIT" in targets:
+                try:
+                    return ast.literal_eval(node.value)
+                except (ValueError, TypeError, SyntaxError):
+                    return {}
+    return {}
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """``jax.lax.psum`` -> ["jax", "lax", "psum"] (best effort)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def lint_source(source: str, module: str) -> list[Finding]:
+    """Lint one module's source text; `module` is the reported name."""
+    tree = ast.parse(source)
+    flags = _module_flags(tree)
+    collectives_allowed = bool(flags.get("collectives_allowed", False))
+    lines = source.splitlines()
+    findings: list[Finding] = []
+
+    def pragma(lineno: int) -> bool:
+        return 0 < lineno <= len(lines) and PRAGMA in lines[lineno - 1]
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        where = f"{module}:{node.lineno}"
+        func = node.func
+        if isinstance(func, ast.Name) and func.id == "float":
+            if not pragma(node.lineno):
+                findings.append(
+                    Finding(
+                        rule="AST",
+                        entry=module,
+                        message=(
+                            "float(...) in a jit-reachable module forces a host "
+                            "sync on traced values; use jnp casts, or mark a "
+                            f"trace-time-static use with `{PRAGMA}`"
+                        ),
+                        where=where,
+                    )
+                )
+            continue
+        if not isinstance(func, ast.Attribute):
+            continue
+        chain = _attr_chain(func)
+        attr = chain[-1]
+        if attr in HOST_SYNC_ATTRS and not node.args and not pragma(node.lineno):
+            findings.append(
+                Finding(
+                    rule="AST",
+                    entry=module,
+                    message=f".{attr}() forces a host sync; keep values on device",
+                    where=where,
+                )
+            )
+        elif attr in HOST_TIME_ATTRS and chain[:-1] == ["time"] and not pragma(node.lineno):
+            findings.append(
+                Finding(
+                    rule="AST",
+                    entry=module,
+                    message=("time.%s() in a jit-reachable module: host time is " % attr)
+                    + "nondeterministic; benchmarks/timing belong outside core",
+                    where=where,
+                )
+            )
+        elif attr in COLLECTIVE_NAMES and "lax" in chain[:-1]:
+            if not collectives_allowed and not pragma(node.lineno):
+                findings.append(
+                    Finding(
+                        rule="AST",
+                        entry=module,
+                        message=(
+                            f"naked lax.{attr} outside a collectives_allowed "
+                            "module; take a `merge` callable from "
+                            "core/distributed.py instead (rule R2 needs one "
+                            "choke point per axis)"
+                        ),
+                        where=where,
+                    )
+                )
+    return findings
+
+
+def lint_module(path: Path, root: Path | None = None) -> list[Finding]:
+    root = root or src_root()
+    module = str(path.relative_to(root)) if path.is_absolute() else str(path)
+    return lint_source(path.read_text(), module)
+
+
+def lint_all(root: Path | None = None) -> tuple[list[Finding], list[str]]:
+    """Lint every jit-reachable module; returns (findings, module names)."""
+    root = root or src_root()
+    findings: list[Finding] = []
+    modules: list[str] = []
+    for path in iter_module_paths(root):
+        modules.append(str(path.relative_to(root)))
+        findings.extend(lint_module(path, root))
+    return findings, modules

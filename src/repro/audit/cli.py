@@ -1,0 +1,124 @@
+"""CLI for the contract auditor (`tools/run_audit.py`; DESIGN.md §15).
+
+Modes:
+  (default)      trace + audit every registered entry point and AST-lint
+                 the jit-reachable modules; exit 1 on any finding
+  --entries TOK  audit only entries whose name contains any TOK
+  --list         print the registry and exit
+  --bad-examples audit the seeded-violation corpus instead of the real
+                 entries (exits 1: the violations are meant to be found)
+  --self-test    assert the auditor's own teeth: every corpus entry must
+                 yield a finding for its seeded rule, every clean control
+                 must audit clean; exit 0 iff both hold
+  --no-ast / --no-jaxpr  skip one of the two layers
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.audit import astlint, bad_examples, tracer
+from repro.audit.report import Report
+
+
+def _run_default(args) -> int:
+    report = Report()
+    if not args.no_jaxpr:
+        names = args.entries or None
+        for spec in tracer.registry():
+            if names is not None and not any(tok in spec.name for tok in names):
+                continue
+            findings = tracer.audit_entry(spec)
+            report.extend(findings)
+            report.entries_checked.append(spec.name)
+            if args.verbose:
+                verdict = "clean" if not findings else f"{len(findings)} finding(s)"
+                print(f"  {spec.name}: {verdict}")
+    if not args.no_ast and not args.entries:
+        findings, modules = astlint.lint_all()
+        report.extend(findings)
+        report.modules_linted.extend(modules)
+    print(report.format(verbose=args.verbose))
+    return report.exit_code()
+
+
+def _run_bad_examples(args) -> int:
+    report = Report()
+    for spec in bad_examples.bad_examples():
+        findings = tracer.audit_entry(spec)
+        report.extend(findings)
+        report.entries_checked.append(spec.name)
+    print(report.format(verbose=args.verbose))
+    return report.exit_code()
+
+
+def _run_self_test(args) -> int:
+    failures = []
+    for spec in bad_examples.bad_examples():
+        findings = tracer.audit_entry(spec)
+        want = bad_examples.expected_rule(spec.name)
+        got = {f.rule for f in findings}
+        if want not in got:
+            failures.append(f"{spec.name}: seeded {want} violation NOT caught (got {sorted(got)})")
+        elif args.verbose:
+            print(f"  {spec.name}: caught ({len(findings)} finding(s))")
+    for spec in bad_examples.clean_controls():
+        findings = tracer.audit_entry(spec)
+        if findings:
+            failures.append(
+                f"{spec.name}: clean control flagged: "
+                + "; ".join(f.format() for f in findings)
+            )
+        elif args.verbose:
+            print(f"  {spec.name}: clean")
+    # The AST layer's teeth, on a synthetic source pair.
+    bad_src = "import jax\ndef f(x):\n    return float(jax.lax.psum(x, 'data'))\n"
+    if not astlint.lint_source(bad_src, "selftest.py"):
+        failures.append("astlint: synthetic host-sync + naked-collective source not flagged")
+    good_src = "AUDIT = {'collectives_allowed': True}\nimport jax\n"
+    good_src += "def f(x):\n    return jax.lax.psum(x, 'data')\n"
+    if astlint.lint_source(good_src, "selftest.py"):
+        failures.append("astlint: collectives_allowed module wrongly flagged")
+    for line in failures:
+        print("SELF-TEST FAIL " + line)
+    n = len(bad_examples.bad_examples()) + len(bad_examples.clean_controls()) + 2
+    verdict = "ok" if not failures else f"{len(failures)} failure(s)"
+    print(f"audit self-test: {n} case(s) -> {verdict}")
+    return 0 if not failures else 1
+
+
+def _run_list() -> int:
+    for spec in tracer.registry():
+        print(f"{spec.name:55s} rules: {', '.join(sorted(spec.rules))}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="run_audit", description="static contract auditor (DESIGN.md §15)"
+    )
+    parser.add_argument("--entries", nargs="*", help="substring filter on entry names")
+    parser.add_argument("--list", action="store_true", help="list the registry and exit")
+    parser.add_argument(
+        "--bad-examples", action="store_true", help="audit the seeded-violation corpus"
+    )
+    parser.add_argument(
+        "--self-test", action="store_true", help="verify the corpus is caught and controls pass"
+    )
+    parser.add_argument("--no-ast", action="store_true", help="skip the AST lint layer")
+    parser.add_argument("--no-jaxpr", action="store_true", help="skip the jaxpr rules")
+    parser.add_argument("-v", "--verbose", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.list:
+        return _run_list()
+    if args.self_test:
+        return _run_self_test(args)
+    if args.bad_examples:
+        return _run_bad_examples(args)
+    return _run_default(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

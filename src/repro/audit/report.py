@@ -1,0 +1,56 @@
+"""Findings and report formatting for the contract auditor (DESIGN.md §15).
+
+A `Finding` is one rule violation pinned to one place (an entry point's
+jaxpr or a source file).  Rules return lists of findings; the CLI collects
+them into a `Report` whose exit code is the audit verdict.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str  # "R1".."R4" or "AST"
+    entry: str  # entry-point name or module path
+    message: str  # what is wrong, in contract terms
+    where: str = ""  # jaxpr path / fn@file:line / file:line
+
+    def format(self) -> str:
+        loc = f" [{self.where}]" if self.where else ""
+        return f"{self.rule} {self.entry}: {self.message}{loc}"
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    entries_checked: list[str] = dataclasses.field(default_factory=list)
+    modules_linted: list[str] = dataclasses.field(default_factory=list)
+
+    def extend(self, findings: list[Finding]) -> None:
+        self.findings.extend(findings)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def exit_code(self) -> int:
+        return 0 if self.ok else 1
+
+    def by_rule(self) -> dict[str, list[Finding]]:
+        out: dict[str, list[Finding]] = {}
+        for f in self.findings:
+            out.setdefault(f.rule, []).append(f)
+        return out
+
+    def format(self, *, verbose: bool = False) -> str:
+        lines = []
+        if verbose or self.findings:
+            for f in self.findings:
+                lines.append("FAIL " + f.format())
+        checked = len(self.entries_checked)
+        linted = len(self.modules_linted)
+        verdict = "clean" if self.ok else f"{len(self.findings)} finding(s)"
+        lines.append(f"audit: {checked} entry point(s), {linted} module(s) linted -> {verdict}")
+        return "\n".join(lines)

@@ -8,6 +8,7 @@ cells are SKIPPED).  The conv waveform frontend is a stub: `input_specs()`
 provides precomputed 512-dim frame embeddings; vocab 504 = masked-prediction
 cluster targets.
 """
+
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -3,6 +3,7 @@
 Assigned spec: 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544.
 [arXiv:2403.17297; hf]
 """
+
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

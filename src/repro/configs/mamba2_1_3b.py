@@ -5,6 +5,7 @@ ssm_state=128.  [arXiv:2405.21060; unverified]
 
 Pure SSM: O(1)-state decode, runs the long_500k cell.
 """
+
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(
@@ -12,7 +13,7 @@ CONFIG = ModelConfig(
     family="ssm",
     num_layers=48,
     d_model=2048,
-    num_heads=1,            # unused (attention-free)
+    num_heads=1,  # unused (attention-free)
     num_kv_heads=1,
     d_ff=0,
     vocab_size=50_280,

@@ -3,6 +3,7 @@
 Assigned spec: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
 [arXiv:2407.10671; hf]
 """
+
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

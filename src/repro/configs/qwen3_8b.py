@@ -3,6 +3,7 @@
 Assigned spec: 36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936.
 [hf:Qwen/Qwen3-8B; hf]
 """
+
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -3,6 +3,7 @@
 Assigned spec: 32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
 [arXiv:2403.04652; hf]
 """
+
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

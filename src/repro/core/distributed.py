@@ -844,3 +844,53 @@ class DistributedEnsembleEngine:
         if probes is None:
             return states, recs
         return states, recs, probe_states
+
+
+# -- contract-auditor registry (repro.audit, DESIGN.md §15) -----------------
+AUDIT = {
+    "collectives_allowed": True,  # the one module that may bind data-axis
+    # collectives directly (with core/traversal.py, whose merge hooks this
+    # module supplies)
+    "entry_points": {
+        "distributed.simulate": {
+            "combos": (
+                {"method": "fmm", "find_phase": "sharded",
+                 "pyramid_exchange": "gathered"},
+                {"method": "fmm", "find_phase": "sharded",
+                 "pyramid_exchange": "routed"},
+                {"method": "fmm", "find_phase": "replicated",
+                 "pyramid_exchange": "gathered"},
+                {"method": "barnes_hut", "find_phase": "sharded",
+                 "pyramid_exchange": "gathered"},
+                {"method": "barnes_hut", "find_phase": "replicated",
+                 "pyramid_exchange": "gathered"},
+                {"method": "fmm", "find_phase": "sharded",
+                 "pyramid_exchange": "gathered", "backend": "pallas"},
+            ),
+            "rules": {
+                "R1": {},
+                "R2": {"allowed_axes": ("data",)},
+                "R3": {},  # min_size = edge_capacity, tracer-resolved
+                "R4": {"allowlist": ()},
+            },
+        },
+        # The §10/§13 lowering probe: the K-batched sharded connectivity
+        # update traced OUTSIDE simulate, so the deletion cond is the only
+        # enclosing cond (see tracer._build_dist_update_vmapped).
+        "distributed.update_vmapped": {
+            "rules": {
+                "R2": {"allowed_axes": ("data",)},
+                "R3": {},  # min_size = K * edge_capacity
+                "R4": {"allowlist": ()},
+            },
+        },
+        "distributed_ensemble.simulate": {
+            "rules": {
+                "R1": {},
+                "R2": {"allowed_axes": ("data",)},
+                "R3": {},
+                "R4": {"allowlist": ()},
+            },
+        },
+    },
+}

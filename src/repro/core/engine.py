@@ -179,7 +179,7 @@ class PlasticityEngine:
         return dataclasses.replace(
             self.fmm_cfg, sigma=params.sigma, c1=params.c1, c2=params.c2,
             guard_delta=guard if guard is not None
-            else float(self.fmm_cfg.delta))
+            else float(self.fmm_cfg.delta))  # audit: ok (static config math)
 
     def _runtime_sign(self, params: Optional[KernelParams],
                       n_active: Optional[jax.Array] = None):
@@ -381,3 +381,35 @@ class PlasticityEngine:
         if probes is None:
             return state, recs
         return state, recs, probe_state
+
+
+# -- contract-auditor registry (repro.audit, DESIGN.md §15) -----------------
+# Plain data: repro/audit/tracer.py builds small instances of each declared
+# entry point and runs the rules; repro/audit/astlint.py reads the module
+# flags.  Size-dependent knobs (R4 padded axis sizes) are resolved by the
+# tracer from the built instance.
+AUDIT = {
+    "collectives_allowed": False,  # single-device module: no lax collectives
+    "entry_points": {
+        "engine.simulate": {
+            "combos": {
+                "method": ("fmm", "barnes_hut", "direct"),
+                "backend": ("reference", "pallas"),
+            },
+            "rules": {
+                "R1": {},
+                "R2": {"allowed_axes": ()},
+                "R4": {"allowlist": ()},
+            },
+        },
+        # Counter-mode RNG + traced n_active: the serve layer's padded
+        # subdomain contract in isolation (DESIGN.md §14).
+        "engine.simulate_padded": {
+            "rules": {
+                "R1": {},
+                "R2": {"allowed_axes": ()},
+                "R4": {"allowlist": ()},
+            },
+        },
+    },
+}

@@ -223,3 +223,20 @@ class EnsembleEngine:
         if probes is None:
             return states, recs
         return states, recs, probe_states
+
+
+# -- contract-auditor registry (repro.audit, DESIGN.md §15) -----------------
+AUDIT = {
+    "collectives_allowed": False,  # replicas must stay independent (§7)
+    "entry_points": {
+        "ensemble.simulate": {
+            "rules": {
+                "R1": {},
+                # Replica-local phases: a collective over ANY axis here
+                # couples replicas and breaks the per-replica contract.
+                "R2": {"allowed_axes": ()},
+                "R4": {"allowlist": ()},
+            },
+        },
+    },
+}

@@ -412,3 +412,14 @@ def find_partners_sharded(structure: OctreeStructure, spans,
     my_tgt = tgt_leaf[leaf_ids]
     return resolve_leaf_partners(structure, positions, ax_vac, den_vac,
                                  my_tgt, k2, cfg, row_start=row_start)
+
+
+# -- contract-auditor registry (repro.audit, DESIGN.md §15) -----------------
+# No entry points of its own: the descent is traced through the engine
+# entries.  The flag sanctions the psum-shaped merge defaults this module
+# binds for the sharded descent (every other module must take collectives
+# as injected `merge` callables or live in core/distributed.py).
+AUDIT = {
+    "collectives_allowed": True,
+    "entry_points": {},
+}

@@ -4,6 +4,7 @@ Functions, not module-level constants: importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS before first jax init; smoke
 tests must keep seeing 1 device).
 """
+
 from __future__ import annotations
 
 import jax
@@ -20,12 +21,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
-    devs = np.array(jax.devices()[:data * model]).reshape(data, model)
+    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
     return Mesh(devs, ("data", "model"))
 
 
-def make_ensemble_mesh(num_devices: int | None = None,
-                       axis: str = "ensemble") -> Mesh:
+def make_ensemble_mesh(num_devices: int | None = None, axis: str = "ensemble") -> Mesh:
     """1-D mesh for the replica axis of core/ensemble.py (its size must
     divide the replica count K).
 
@@ -48,15 +48,14 @@ def make_data_mesh(data: int | None = None, axis: str = "data") -> Mesh:
     devs = jax.devices()
     if data is not None:
         if len(devs) < data:
-            raise ValueError(f"data mesh needs {data} devices, "
-                             f"have {len(devs)}")
+            raise ValueError(f"data mesh needs {data} devices, " f"have {len(devs)}")
         devs = devs[:data]
     return Mesh(np.array(devs), (axis,))
 
 
-def make_sweep_mesh(ensemble: int, data: int,
-                    ensemble_axis: str = "ensemble",
-                    data_axis: str = "data") -> Mesh:
+def make_sweep_mesh(
+    ensemble: int, data: int, ensemble_axis: str = "ensemble", data_axis: str = "data"
+) -> Mesh:
     """2-D (ensemble x data) mesh for distributed parameter sweeps
     (core/distributed.DistributedEnsembleEngine): K replicas sharded over
     `ensemble` device rows, each replica's neurons/edges decomposed over
@@ -68,7 +67,7 @@ def make_sweep_mesh(ensemble: int, data: int,
     need = ensemble * data
     devs = jax.devices()
     if len(devs) < need:
-        raise ValueError(f"sweep mesh needs {need} devices "
-                         f"({ensemble} x {data}), have {len(devs)}")
-    return Mesh(np.array(devs[:need]).reshape(ensemble, data),
-                (ensemble_axis, data_axis))
+        raise ValueError(
+            f"sweep mesh needs {need} devices " f"({ensemble} x {data}), have {len(devs)}"
+        )
+    return Mesh(np.array(devs[:need]).reshape(ensemble, data), (ensemble_axis, data_axis))

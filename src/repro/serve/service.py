@@ -443,3 +443,19 @@ class SimulationService:
         for mgr in self._managers.values():
             mgr.close()
         self._managers.clear()
+
+
+# -- contract-auditor registry (repro.audit, DESIGN.md §15) -----------------
+AUDIT = {
+    "collectives_allowed": False,  # the round program is slot-local; the
+    # optional mesh shards slots, it never reduces across them
+    "entry_points": {
+        "serve.round": {
+            "rules": {
+                "R1": {},
+                "R2": {"allowed_axes": ()},
+                "R4": {"allowlist": ()},
+            },
+        },
+    },
+}

@@ -34,6 +34,33 @@ SHARD_MAP_NO_CHECK = {
 
 PyTree = Any
 
+# -- machine-readable axis contracts (repro.audit rule R2, DESIGN.md §15) ----
+# Every named mesh axis the simulation engines use, with its role and the
+# collective primitives sanctioned over it.  The contract auditor walks
+# traced jaxprs and flags any collective whose axis is undeclared here or
+# whose primitive is outside the sanctioned set — e.g. a psum over
+# "ensemble" would silently couple replicas and void the per-replica
+# bitwise contract (§7), yet typecheck fine.
+AXIS_CONTRACTS = {
+    # The neuron-shard axis: exact raw-sum transport (pyramid partials,
+    # descent maps, request exchange) plus the edge-table/request gathers.
+    # psum_scatter is the routed exchange's sparse-p2p stand-in (§13); jax
+    # spells it `reduce_scatter` in jaxprs and may simplify it to `psum` on
+    # a size-1 axis, so all three spellings are sanctioned together.
+    "data": {
+        "role": "shard",
+        "collectives": frozenset(
+            {"psum", "all_gather", "reduce_scatter", "psum_scatter"}
+        ),
+    },
+    # The replica/slot axis: pure batching.  Replicas (and serve slots)
+    # must stay independent — NO collective is ever sanctioned here.
+    "ensemble": {
+        "role": "replica",
+        "collectives": frozenset(),
+    },
+}
+
 
 def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -12,8 +12,9 @@ below supports exactly the subset these tests use —
 deterministic RNG (no shrinking, no example database; property coverage is
 preserved, reproduction of a failure is a fixed seed sequence).
 """
+
 try:
-    from hypothesis import given, settings, strategies      # noqa: F401
+    from hypothesis import given, settings, strategies  # noqa: F401
 except ModuleNotFoundError:
     import random
 
@@ -24,7 +25,7 @@ except ModuleNotFoundError:
         def example(self, rng):
             return rng.randint(self.lo, self.hi)
 
-    class strategies:                                       # noqa: N801
+    class strategies:  # noqa: N801
         @staticmethod
         def integers(min_value, max_value):
             return _Integers(min_value, max_value)
@@ -35,14 +36,17 @@ except ModuleNotFoundError:
                 rng = random.Random(0xC0FFEE)
                 for _ in range(getattr(wrapper, "_max_examples", 20)):
                     fn(*args, *(s.example(rng) for s in strats), **kwargs)
+
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
             wrapper.__module__ = fn.__module__
             return wrapper
+
         return deco
 
     def settings(max_examples=20, **_ignored):
         def deco(fn):
             fn._max_examples = max_examples
             return fn
+
         return deco

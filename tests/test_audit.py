@@ -1,0 +1,164 @@
+"""The contract auditor audits itself (DESIGN.md §15, docs/audit.md).
+
+Three layers:
+
+* golden bad-examples corpus — each seeded violation (unpinned record std,
+  mis-scoped psum, cond-lowered-to-select gather, raw padded-axis sum)
+  must be caught by its rule, and each corrected twin must audit clean;
+* the walker/AST primitives in isolation (cond nesting context, pragma
+  handling, collectives_allowed flags);
+* the real registry — a fast representative slice per engine family must
+  audit clean inline, the full combo sweep runs as a slow test (CI runs it
+  anyway via the blocking `audit` job on both jax pins).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.audit import (
+    EqnContext,
+    audit_entry,
+    audit_jaxpr,
+    iter_eqns,
+    registry,
+)
+from repro.audit import astlint, walker
+from repro.audit import bad_examples as bx
+
+
+# -- golden corpus ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", bx.bad_examples(), ids=lambda s: s.name)
+def test_seeded_violation_is_caught(spec):
+    findings = audit_entry(spec)
+    want = bx.expected_rule(spec.name)
+    got = {f.rule for f in findings}
+    assert want in got, (
+        f"seeded {want} violation not caught; findings: "
+        f"{[f.format() for f in findings]}"
+    )
+
+
+@pytest.mark.parametrize("spec", bx.clean_controls(), ids=lambda s: s.name)
+def test_clean_control_passes(spec):
+    findings = audit_entry(spec)
+    assert not findings, "\n".join(f.format() for f in findings)
+
+
+def test_unknown_rule_id_is_an_error():
+    jaxpr = jax.make_jaxpr(lambda x: x + 1)(jnp.ones(3))
+    with pytest.raises(KeyError, match="R9"):
+        audit_jaxpr(jaxpr, {"R9": {}}, entry="typo")
+
+
+# -- walker primitives ------------------------------------------------------
+
+
+def test_walker_cond_nesting_context():
+    def f(pred, x):
+        inner = lambda v: jax.lax.cond(v.sum() > 0, lambda w: w * 2, lambda w: w, v)
+        return jax.lax.cond(pred, inner, lambda v: v, x)
+
+    jaxpr = jax.make_jaxpr(f)(True, jnp.ones(4))
+    depths = {}
+    for eqn, ctx in iter_eqns(jaxpr):
+        depths.setdefault(ctx.in_cond, []).append(eqn.primitive.name)
+    assert "cond" in depths[False]          # the outer cond itself
+    assert "mul" in depths[True]            # the doubled branch, nested twice
+    paths = [ctx.path for _, ctx in iter_eqns(jaxpr) if ctx.path]
+    assert any(len(p) == 2 for p in paths), "nested cond branches not entered"
+
+
+def test_walker_sees_through_scan_and_pjit():
+    @jax.jit
+    def f(x):
+        return jax.lax.scan(lambda c, _: (c * 1.5, c), x, None, length=3)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.float32(1))
+    names = {eqn.primitive.name for eqn, _ in iter_eqns(jaxpr)}
+    assert "mul" in names, f"scan body not recursed into: {names}"
+
+
+def test_root_def_min_size_sees_reduction_pinch():
+    def f(x):
+        mean = jnp.broadcast_to(x.sum() / x.shape[0], x.shape)
+        return x - mean
+
+    jx = jax.make_jaxpr(f)(jnp.ones(8)).jaxpr
+    defs = walker.def_map(jx)
+    sub = [e for e in jx.eqns if e.primitive.name == "sub"][0]
+    pinches = [walker.root_def_min_size(v, defs)[1]
+               for v in sub.invars if hasattr(v, "aval")]
+    assert min(pinches) == 1, "mean side's scalar pinch not detected"
+
+
+# -- AST lint ---------------------------------------------------------------
+
+
+def test_astlint_flags_host_sync_and_time():
+    src = ("import time\n"
+           "def f(x):\n"
+           "    t = time.time()\n"
+           "    return float(x) + x.item() + t\n")
+    rules_hit = {f.message.split()[0] for f in astlint.lint_source(src, "m.py")}
+    assert len(astlint.lint_source(src, "m.py")) == 3
+    assert any("float" in m for m in rules_hit)
+
+
+def test_astlint_pragma_optout():
+    src = "def f(cfg):\n    return float(cfg.delta)  # audit: ok (static)\n"
+    assert astlint.lint_source(src, "m.py") == []
+
+
+def test_astlint_collective_scoping_flag():
+    naked = "import jax\ndef f(x):\n    return jax.lax.psum(x, 'data')\n"
+    assert astlint.lint_source(naked, "m.py"), "naked collective not flagged"
+    allowed = "AUDIT = {'collectives_allowed': True}\n" + naked
+    assert astlint.lint_source(allowed, "m.py") == []
+
+
+def test_astlint_real_modules_clean():
+    findings, modules = astlint.lint_all()
+    assert len(modules) > 15, modules
+    assert not findings, "\n".join(f.format() for f in findings)
+
+
+# -- the real registry ------------------------------------------------------
+
+_FAST_ENTRIES = [
+    "engine.simulate[fmm/reference]",
+    "distributed.simulate[fmm/sharded/routed]",
+    "distributed.update_vmapped[fmm/sharded/K=2]",
+    "serve.round[K=2]",
+]
+
+
+def _registry_by_name():
+    return {spec.name: spec for spec in registry()}
+
+
+@pytest.mark.parametrize("name", _FAST_ENTRIES)
+def test_representative_entry_points_audit_clean(name):
+    spec = _registry_by_name()[name]
+    findings = audit_entry(spec)
+    assert not findings, "\n".join(f.format() for f in findings)
+
+
+def test_registry_covers_every_engine_family():
+    names = list(_registry_by_name())
+    for family in ("engine.simulate", "engine.simulate_padded",
+                   "distributed.simulate", "distributed.update_vmapped",
+                   "ensemble.simulate", "distributed_ensemble.simulate",
+                   "serve.round"):
+        assert any(n.startswith(family + "[") for n in names), family
+    assert len(names) >= 15, names
+
+
+@pytest.mark.slow
+def test_full_registry_audits_clean():
+    for spec in registry():
+        findings = audit_entry(spec)
+        assert not findings, (
+            spec.name + ":\n" + "\n".join(f.format() for f in findings))

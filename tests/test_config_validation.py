@@ -5,6 +5,7 @@ branch of `FMMConfig.delta`, silently changing the kernel scale by a factor
 of sigma; an unknown `tier_mode` silently meant "paper", and an unknown
 `EngineConfig.pyramid` silently meant "segsum".
 """
+
 import dataclasses
 
 import pytest
@@ -33,7 +34,7 @@ def test_engine_config_rejects_unknown_values():
         EngineConfig(pyramid="m2m2")
     with pytest.raises(ValueError, match="method"):
         EngineConfig(method="fm")
-    EngineConfig(method="barnes_hut", pyramid="m2m")   # valid combos pass
+    EngineConfig(method="barnes_hut", pyramid="m2m")  # valid combos pass
 
 
 def test_dataclasses_replace_revalidates():

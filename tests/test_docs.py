@@ -111,3 +111,43 @@ def test_serve_guide_referenced_paths_exist():
     for p in sorted(set(paths)):
         assert os.path.isfile(os.path.join(ROOT, p)), \
             f"docs/serve.md references {p}, which does not exist"
+
+
+def test_audit_guide_exists_and_is_linked():
+    path = os.path.join(ROOT, "docs", "audit.md")
+    assert os.path.isfile(path), "docs/audit.md missing"
+    with open(os.path.join(ROOT, "README.md")) as f:
+        assert "docs/audit.md" in f.read(), \
+            "README.md no longer links the auditor guide"
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        assert "## §15" in f.read(), \
+            "DESIGN.md lost its §15 (contract auditor)"
+
+
+def test_audit_guide_python_snippets_parse():
+    """Every ```python fence in docs/audit.md must be valid syntax."""
+    with open(os.path.join(ROOT, "docs", "audit.md")) as f:
+        text = f.read()
+    fences = re.findall(r"```python\n(.*?)```", text, re.S)
+    assert len(fences) >= 3, "the guide lost its worked examples"
+    for i, snippet in enumerate(fences):
+        try:
+            ast.parse(snippet)
+        except SyntaxError as e:
+            raise AssertionError(
+                f"docs/audit.md python fence #{i} does not parse: {e}\n"
+                f"{snippet}") from None
+
+
+def test_audit_guide_referenced_paths_exist():
+    """Backticked repo-relative paths in the guide must exist on disk."""
+    with open(os.path.join(ROOT, "docs", "audit.md")) as f:
+        text = f.read()
+    paths = re.findall(
+        r"`((?:src|tests|examples|benchmarks|docs|tools)/[\w./]+?"
+        r"\.(?:py|md))(?:::\w+)?`", text)
+    assert "tools/run_audit.py" in paths
+    assert "tests/test_vmap_deletion.py" in paths
+    for p in sorted(set(paths)):
+        assert os.path.isfile(os.path.join(ROOT, p)), \
+            f"docs/audit.md references {p}, which does not exist"

@@ -3,19 +3,23 @@ any-excess deletion stays a genuine `lax.cond` (DESIGN.md §13).
 
 Two halves:
 
-* lowering — the jaxpr of the vmapped sharded connectivity update contains
-  NO O(K*E) edge-table all_gather outside a cond branch (the former
-  caveat: a per-replica predicate lowered the cond to a `select` that ran
-  the gather unconditionally on 2-D sweep meshes), while the gather is
-  still present INSIDE the branch for the genuine-excess case;
+* lowering — audited via `repro.audit` rule R3 (this test is a consumer of
+  the library API that generalized its original hand-rolled jaxpr walker,
+  DESIGN.md §15): the jaxpr of the vmapped sharded connectivity update
+  contains NO O(K*E) edge-table all_gather outside a cond branch (the
+  former caveat: a per-replica predicate lowered the cond to a `select`
+  that ran the gather unconditionally on 2-D sweep meshes), while the
+  gather is still present INSIDE the branch for the genuine-excess case;
 * values — a forced-deletion step under a K=2 ensemble on a 2-D sweep
   mesh stays bitwise equal to independent single-device runs.
 """
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.audit import audit_jaxpr
 from repro.core.engine import EngineConfig, PlasticityEngine
 from repro.core.msp import MSPConfig
 from repro.core.traversal import FMMConfig
@@ -37,24 +41,6 @@ def _dist_engine():
         FMMConfig(c1=8, c2=8), EngineConfig(method="fmm"))
 
 
-def _iter_gathers(jaxpr, in_cond=False):
-    """Yield (eqn, in_cond_branch) for every all_gather, recursing through
-    every sub-jaxpr a primitive carries (cond branches, scan/closed-call
-    bodies, custom_* internals)."""
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "all_gather":
-            yield eqn, in_cond
-        inside = in_cond or eqn.primitive.name == "cond"
-        for param in eqn.params.values():
-            for sub in (param if isinstance(param, (tuple, list))
-                        else (param,)):
-                inner = getattr(sub, "jaxpr", None)
-                if inner is not None and hasattr(inner, "eqns"):
-                    yield from _iter_gathers(inner, inside)
-                elif hasattr(sub, "eqns"):
-                    yield from _iter_gathers(sub, inside)
-
-
 def test_vmapped_update_keeps_deletion_gather_conditional():
     eng = _dist_engine()
     states = jax.tree.map(
@@ -73,16 +59,13 @@ def test_vmapped_update_keeps_deletion_gather_conditional():
                         **SHARD_MAP_NO_CHECK)
     jaxpr = jax.make_jaxpr(sharded)(states, keys)
 
+    # Rule R3 asserts both directions at once: every edge-table-sized
+    # all_gather sits under a real cond (nothing lowered to select), and at
+    # least one conditional gather exists (the deletion path is present).
     threshold = K * eng.edge_capacity  # the batched edge-table gather
-    big = [(eqn, in_cond) for eqn, in_cond in _iter_gathers(jaxpr.jaxpr)
-           if int(np.prod(eqn.outvars[0].aval.shape)) >= threshold]
-    assert big, "no edge-table-sized all_gather found at all"
-    unconditional = [eqn for eqn, in_cond in big if not in_cond]
-    assert not unconditional, (
-        f"O(K*E) edge-table gather lowered OUTSIDE the deletion cond: "
-        f"{unconditional}")
-    assert any(in_cond for _, in_cond in big), (
-        "deletion-path gather missing from the cond branch")
+    findings = audit_jaxpr(jaxpr, {"R3": {"min_size": threshold}},
+                           entry="test.vmapped_update")
+    assert not findings, "\n".join(f.format() for f in findings)
 
 
 def test_forced_deletion_bitwise_under_2d_ensemble():

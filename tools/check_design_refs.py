@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Docs-consistency check: every `DESIGN.md §N` reference must resolve.
+"""Docs-consistency check: every `DESIGN.md §N` reference must resolve,
+and benchmarks/README.md must agree with the figure registry.
 
 Scans src/, tests/, examples/, benchmarks/, docs/ (plus the top-level *.md
 files, DESIGN.md's own cross-references included) and fails if any numeric
@@ -8,10 +9,17 @@ section DESIGN.md does not have.  Numeric § sections are a DESIGN.md-only
 convention in this repo (EXPERIMENTS.md uses named anchors like §Perf /
 §Roofline), so EVERY `§N` is treated as a citation — this catches chained
 forms ("DESIGN.md §4, §9"), continuation lines, and markdown-link forms
-that a `DESIGN.md §N`-adjacency regex would silently skip.  Run by CI on
-every PR and by tests/test_docs.py in the tier-1 suite, so a refactor that
-renumbers DESIGN.md (or a docstring citing a not-yet-written section) fails
-loudly instead of rotting.
+that a `DESIGN.md §N`-adjacency regex would silently skip.
+
+Second check, same spirit: the `fig_*` figure names.  Every backticked
+`fig...` token in benchmarks/README.md must name a figure registered in
+benchmarks/run.py, and every registered `fig_*` figure must appear in
+benchmarks/README.md — so a figure added without docs, or a doc row that
+outlives its figure, is a lint error rather than rot.
+
+Run by CI on every PR and by tests/test_docs.py in the tier-1 suite, so a
+refactor that renumbers DESIGN.md (or a docstring citing a not-yet-written
+section) fails loudly instead of rotting.
 
     python tools/check_design_refs.py [repo_root]
 """
@@ -25,6 +33,11 @@ REF = re.compile(r"§(\d+)")
 SECTION = re.compile(r"^##\s*§(\d+)\b", re.M)
 SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "docs")
 SCAN_SUFFIXES = {".py", ".md", ".yml", ".yaml", ".toml"}
+
+# benchmarks/run.py registry entries: run("name", ...)
+FIG_REGISTRATION = re.compile(r"""run\(\s*["']([a-z0-9_]+)["']""")
+# inline-code figure tokens in benchmarks/README.md: `fig...`
+FIG_MENTION = re.compile(r"`(fig[a-z0-9_]*)`")
 
 
 def design_sections(root: Path) -> set[int]:
@@ -61,18 +74,49 @@ def check(root: Path) -> list[str]:
     return errors
 
 
+def registered_figures(root: Path) -> set[str]:
+    run_py = root / "benchmarks" / "run.py"
+    if not run_py.is_file():
+        raise SystemExit(f"FAIL: {run_py} does not exist")
+    return set(FIG_REGISTRATION.findall(run_py.read_text()))
+
+
+def check_figures(root: Path) -> list[str]:
+    """benchmarks/README.md `fig...` tokens <-> benchmarks/run.py registry."""
+    readme = root / "benchmarks" / "README.md"
+    if not readme.is_file():
+        return [f"FAIL: {readme} does not exist"]
+    registry = registered_figures(root)
+    errors = []
+    mentioned: set[str] = set()
+    for lineno, line in enumerate(readme.read_text().splitlines(), 1):
+        for name in FIG_MENTION.findall(line):
+            mentioned.add(name)
+            if name not in registry:
+                errors.append(
+                    f"benchmarks/README.md:{lineno}: names `{name}`, but "
+                    f"benchmarks/run.py registers no such figure")
+    for name in sorted(registry):
+        if name.startswith("fig") and name not in mentioned:
+            errors.append(
+                f"benchmarks/run.py registers `{name}` but "
+                f"benchmarks/README.md never documents it")
+    return errors
+
+
 def main() -> int:
     root = Path(sys.argv[1]) if len(sys.argv) > 1 \
         else Path(__file__).resolve().parent.parent
-    errors = check(root)
+    errors = check(root) + check_figures(root)
     for err in errors:
         print(err, file=sys.stderr)
     if errors:
-        print(f"FAIL: {len(errors)} dangling DESIGN.md § reference(s)",
-              file=sys.stderr)
+        print(f"FAIL: {len(errors)} dangling DESIGN.md § / figure "
+              f"reference(s)", file=sys.stderr)
         return 1
     print(f"OK: all DESIGN.md § references resolve "
-          f"(sections {sorted(design_sections(root))})")
+          f"(sections {sorted(design_sections(root))}); benchmarks/README.md "
+          f"matches the {len(registered_figures(root))}-figure registry")
     return 0
 
 

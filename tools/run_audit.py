@@ -1,0 +1,25 @@
+#!/usr/bin/env python
+"""Static contract auditor CLI (blocking CI `audit` job; DESIGN.md §15).
+
+Traces every registered engine/serve entry point to a closed jaxpr, runs
+the determinism rules R1-R4, and AST-lints the jit-reachable modules.
+Exit 0 = contract shapes intact; exit 1 = findings (printed).
+
+    python tools/run_audit.py              # full audit
+    python tools/run_audit.py --list       # show the entry-point registry
+    python tools/run_audit.py --self-test  # the auditor's own teeth
+    python tools/run_audit.py --bad-examples  # seeded violations (exits 1)
+
+Implementation lives in src/repro/audit/ (docs/audit.md is the guide);
+this wrapper only fixes up sys.path so it runs without PYTHONPATH=src.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.audit.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
